@@ -1,0 +1,65 @@
+"""Shared benchmark plumbing: run a trace through every policy, format
+paper-style tables, write JSON artifacts."""
+from __future__ import annotations
+
+import copy
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core import (ClusterState, InterferenceModel, Simulator,
+                        make_scheduler, paper_interference_model)
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                         "bench")
+
+POLICIES = ("fifo", "sjf", "srsf", "tiresias", "pollux", "sjf-ffs",
+            "sjf-bsbf")
+
+
+def run_policy(policy: str, jobs, *, n_servers=16, gpus_per_server=4,
+               interference: Optional[InterferenceModel] = None,
+               capacity_gb: float = 11.0):
+    cluster = ClusterState(n_servers=n_servers,
+                           gpus_per_server=gpus_per_server,
+                           gpu_capacity_bytes=capacity_gb * 2 ** 30)
+    sim = Simulator(cluster, copy.deepcopy(jobs), make_scheduler(policy),
+                    interference=interference or paper_interference_model())
+    return sim.run()
+
+
+def run_all_policies(jobs, policies: Sequence[str] = POLICIES, **kw
+                     ) -> Dict[str, object]:
+    out = {}
+    for p in policies:
+        t0 = time.time()
+        out[p] = run_policy(p, jobs, **kw)
+        out[p].wall_seconds = time.time() - t0
+    return out
+
+
+def table(results: Dict[str, object], title: str) -> str:
+    lines = [title, f"{'policy':<10} {'makespan':>10} {'avg JCT':>10} "
+                    f"{'JCT lg':>9} {'JCT sm':>9} {'queue':>9} "
+                    f"{'q lg':>8} {'q sm':>8}"]
+    for p, r in results.items():
+        s = r.summary()
+        lines.append(
+            f"{p:<10} {s['makespan']:>10.1f} {s['avg_jct']:>10.1f} "
+            f"{s['avg_jct_large']:>9.1f} {s['avg_jct_small']:>9.1f} "
+            f"{s['avg_queue']:>9.1f} {s['avg_queue_large']:>8.1f} "
+            f"{s['avg_queue_small']:>8.1f}")
+    return "\n".join(lines)
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def summaries(results: Dict[str, object]) -> Dict[str, Dict]:
+    return {p: r.summary() for p, r in results.items()}

@@ -1,0 +1,45 @@
+"""Figures 4-5 — JCT distributions (CDF deciles) and per-DL-task average
+queueing time, physical (30-job) and simulation (240-job) workloads."""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict
+
+import numpy as np
+
+from repro.core import physical_trace, simulation_trace
+
+from .common import POLICIES, run_all_policies, save_json
+
+
+def _jct_deciles(res) -> list:
+    jcts = res.jct_list()
+    return [float(np.percentile(jcts, q)) for q in range(10, 101, 10)]
+
+
+def _queue_by_model(res) -> Dict[str, float]:
+    acc = defaultdict(list)
+    for j in res.jobs:
+        acc[j.model].append(j.queueing_delay())
+    return {m: float(np.mean(v)) for m, v in sorted(acc.items())}
+
+
+def run(verbose: bool = True):
+    payload = {}
+    for tag, jobs, ns in (("fig4_physical", physical_trace(), 4),
+                          ("fig5_simulation", simulation_trace(240), 16)):
+        results = run_all_policies(jobs, n_servers=ns, gpus_per_server=4)
+        payload[tag] = {
+            p: {"jct_deciles": _jct_deciles(r),
+                "queue_by_model": _queue_by_model(r)}
+            for p, r in results.items()}
+        if verbose:
+            print(f"{tag}: median JCT per policy: " + ", ".join(
+                f"{p}={payload[tag][p]['jct_deciles'][4]:.0f}s"
+                for p in POLICIES))
+    save_json("fig4_fig5.json", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Figure 6a — sensitivity to workload intensity: the 240-job trace scaled
+0.5x-2x in submission rate (120..480 jobs at matching arrival rates)."""
+from __future__ import annotations
+
+from repro.core import simulation_trace
+
+from .common import POLICIES, run_all_policies, save_json
+
+
+def run(verbose: bool = True):
+    payload = {}
+    for scale, n_jobs in ((0.5, 120), (1.0, 240), (1.5, 360), (2.0, 480)):
+        jobs = simulation_trace(n_jobs=n_jobs, load_scale=scale)
+        results = run_all_policies(jobs, n_servers=16, gpus_per_server=4)
+        payload[f"{scale}x"] = {p: r.summary()["avg_jct"]
+                                for p, r in results.items()}
+        if verbose:
+            row = payload[f"{scale}x"]
+            print(f"load {scale}x ({n_jobs} jobs): " + ", ".join(
+                f"{p}={row[p]:.0f}s" for p in POLICIES))
+    save_json("fig6a_load.json", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

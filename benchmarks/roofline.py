@@ -1,0 +1,126 @@
+"""§Roofline — derive the three roofline terms per (arch x shape x mesh)
+from the dry-run artifacts (benchmark for the multi-pod deliverable).
+
+  compute_s    = HLO_FLOPs / (chips * 197 TFLOP/s)
+  memory_s     = HLO_bytes / (chips * 819 GB/s)
+  collective_s = collective_bytes / (chips * 50 GB/s/link)
+
+cost_analysis() on the partitioned module reports PER-DEVICE numbers, so
+chips=1 in the denominators here; collective bytes are parsed from the
+post-SPMD HLO (per-device shapes) in repro.launch.hlo_stats.
+
+MODEL_FLOPS uses the 6*N_active*D (train) / 2*N_active*D (inference)
+convention with N_active excluding embedding/unembedding tables (their
+compute is a gather + one matmul already inside HLO_FLOPs); the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat recompute, MoE dispatch einsums and
+attention FLOPs not counted by the 6ND convention.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.shapes import INPUT_SHAPES
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_JSON = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                           "dryrun", "dryrun.json")
+
+_N_CACHE: Dict[str, Dict[str, float]] = {}
+
+
+def _param_counts(arch: str) -> Dict[str, float]:
+    """Exact param count of our implementation (eval_shape) + active."""
+    if arch in _N_CACHE:
+        return _N_CACHE[arch]
+    from repro.launch.specs import params_shape
+    cfg = get_config(arch)
+    p = params_shape(cfg)
+    total = sum(x.size for x in jax.tree.leaves(p))
+    emb = p["embed"]["table"].size
+    head = p["lm_head"]["w"].size if "lm_head" in p else 0
+    n_flops = total - emb - head          # params that do matmul work
+    # MoE: only top_k of the routed experts are active per token
+    inactive = 0.0
+    if cfg.moe_experts:
+        u = cfg.pattern_unit()
+        n_moe_layers = cfg.n_units          # one MoE layer per unit
+        e_tree = jax.tree.leaves(
+            jax.tree.map(lambda x: x.size,
+                         p["units"][f"sub{u-1}" if u > 1 else "sub0"]
+                         ["ffn"]["experts"]))
+        per_layer_expert_params = sum(e_tree) / cfg.n_units
+        e_pad = max(cfg.moe_experts, cfg.moe_pad_to or 0)
+        inactive = (n_moe_layers * per_layer_expert_params
+                    * (e_pad - cfg.moe_top_k) / e_pad)
+    _N_CACHE[arch] = {"total": float(total),
+                      "active_flops": float(n_flops - inactive)}
+    return _N_CACHE[arch]
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    shape = INPUT_SHAPES[shape_name]
+    n = _param_counts(arch)["active_flops"]
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind in ("train", "prefill")
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def _advice(dominant: str, rec: Dict) -> str:
+    if dominant == "collective_s":
+        coll = rec["collective_bytes_per_device"]
+        worst = max((k for k in coll if k != "total"),
+                    key=lambda k: coll[k])
+        return (f"cut {worst} traffic (resharding/axis choice, "
+                f"overlap with compute)")
+    if dominant == "memory_s":
+        return ("raise arithmetic intensity: fuse elementwise chains, "
+                "larger per-step tiles, fewer remat recomputes")
+    return "already MXU-bound: reduce non-model FLOPs (remat, dispatch)"
+
+
+def run(verbose: bool = True, mesh: Optional[str] = None) -> List[Dict]:
+    with open(DRYRUN_JSON) as f:
+        records = json.load(f)
+    rows = []
+    for rec in records:
+        if rec.get("status") != "ok":
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        mf = model_flops(rec["arch"], rec["shape"])
+        hlo_total = rec["hlo_flops_per_device"] * rec["n_devices"]
+        r = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "model_flops": mf,
+            "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+            "advice": _advice(r["dominant"], rec),
+        })
+    rows.sort(key=lambda x: (x["mesh"], x["arch"], x["shape"]))
+    if verbose:
+        hdr = (f"{'arch':<26} {'shape':<12} {'mesh':<8} {'compute_s':>10} "
+               f"{'memory_s':>10} {'collect_s':>10} {'dominant':>12} "
+               f"{'useful':>7}")
+        print(hdr)
+        for x in rows:
+            print(f"{x['arch']:<26} {x['shape']:<12} {x['mesh']:<8} "
+                  f"{x['compute_s']:>10.2e} {x['memory_s']:>10.2e} "
+                  f"{x['collective_s']:>10.2e} "
+                  f"{x['dominant'].replace('_s',''):>12} "
+                  f"{x['useful_ratio']:>7.2f}")
+    from .common import save_json
+    save_json("roofline.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

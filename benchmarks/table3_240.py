@@ -1,0 +1,28 @@
+"""Table III — 240-job simulation on the 64-GPU cluster (16 servers x 4):
+average JCT and queueing for all/large/small jobs per policy."""
+from __future__ import annotations
+
+from repro.core import simulation_trace
+
+from .common import run_all_policies, save_json, summaries, table
+
+
+def run(n_jobs: int = 240, seed: int = 0, verbose: bool = True,
+        name: str = "table3_240"):
+    jobs = simulation_trace(n_jobs=n_jobs, seed=seed)
+    results = run_all_policies(jobs, n_servers=16, gpus_per_server=4)
+    if verbose:
+        print(table(results, f"Table ({n_jobs} jobs, 16x4 GPUs)"))
+    payload = summaries(results)
+    save_json(f"{name}.json", payload)
+    s = payload
+    if verbose:
+        print(f"  BSBF vs FFS JCT: "
+              f"{s['sjf-bsbf']['avg_jct']:.1f} vs {s['sjf-ffs']['avg_jct']:.1f}; "
+              f"small-job queue BSBF {s['sjf-bsbf']['avg_queue_small']:.1f}s "
+              f"(lowest: {min(v['avg_queue_small'] for v in s.values()):.1f}s)")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,3 @@
+from .npz import load_pytree, restore, save, save_pytree
+
+__all__ = ["load_pytree", "restore", "save", "save_pytree"]

@@ -1,0 +1,74 @@
+"""Minimal npz pytree checkpointing: flatten with '/'-joined key paths,
+save atomically, restore into the same tree structure."""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey)
+            else str(getattr(p, "idx", p)) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: str, tree) -> None:
+    flat = _flatten(tree)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    # NOTE: np.savez appends ".npz" unless the name already ends with it
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_pytree(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (a template pytree)."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_keys, leaf in leaves_like:
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey)
+            else str(getattr(p, "idx", p)) for p in path_keys)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out)
+
+
+def save(path: str, *, params, opt_state=None, step: int = 0,
+         extra: Optional[Dict] = None) -> None:
+    tree = {"params": params, "step": jnp.asarray(step)}
+    if opt_state is not None:
+        tree["opt"] = opt_state
+    if extra:
+        tree["extra"] = extra
+    save_pytree(path, tree)
+
+
+def restore(path: str, *, params_like, opt_like=None) -> Tuple:
+    like = {"params": params_like, "step": jnp.zeros((), jnp.int32)}
+    if opt_like is not None:
+        like["opt"] = opt_like
+    tree = load_pytree(path, like)
+    return (tree["params"], tree.get("opt"), int(tree["step"]))

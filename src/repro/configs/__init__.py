@@ -1,0 +1,5 @@
+from .base import ARCH_NAMES, ArchConfig, all_configs, get_config
+from .shapes import INPUT_SHAPES, InputShape, input_specs
+
+__all__ = ["ARCH_NAMES", "ArchConfig", "INPUT_SHAPES", "InputShape",
+           "all_configs", "get_config", "input_specs"]

@@ -1,0 +1,93 @@
+"""The four assigned input shapes and the ShapeDtypeStruct stand-ins the
+dry-run lowers against (no device allocation).
+
+  train_4k     seq_len=  4,096  global_batch=256   train_step
+  prefill_32k  seq_len= 32,768  global_batch= 32   prefill forward
+  decode_32k   seq_len= 32,768  global_batch=128   serve_step (1 token +
+                                                   KV cache of seq_len)
+  long_500k    seq_len=524,288  global_batch=  1   serve_step, sub-quadratic
+                                                   archs only (DESIGN.md §5)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import ArchConfig
+
+# sliding window used by the long-context variant of full-attention archs
+LONG_CTX_WINDOW = 8192
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: InputShape) -> Optional[str]:
+    """None if (cfg, shape) runs; else a skip reason (recorded in
+    EXPERIMENTS.md)."""
+    if shape.name == "long_500k" and cfg.family == "audio":
+        return ("enc-dec whisper decoder is trained for 448 positions; "
+                "0.5M-token decode is out of family semantics "
+                "(DESIGN.md §5)")
+    return None
+
+
+def variant_for_shape(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """long_500k on full-attention families uses the sliding-window
+    sub-quadratic variant; SSM/hybrid run natively."""
+    if (shape.name == "long_500k" and cfg.family in ("dense", "vlm", "moe")
+            and cfg.sliding_window == 0):
+        return dataclasses.replace(cfg, sliding_window=LONG_CTX_WINDOW)
+    return cfg
+
+
+# ---------------------------------------------------------------------- #
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, object]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape.
+
+    train/prefill: token batch (+ modality-stub embeddings).
+    decode: one new token per sequence + the decode cache (KV cache of
+    ``seq_len`` / recurrent state), via ``jax.eval_shape`` over
+    ``init_cache`` — weak-type-correct, shardable, no allocation.
+    """
+    cfg = variant_for_shape(cfg, shape)
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": _sds((b, s), jnp.int32)}
+        if shape.kind == "train":
+            specs["labels"] = _sds((b, s), jnp.int32)
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = _sds(
+                (b, cfg.vision_tokens, cfg.d_model), dt)
+        if cfg.family == "audio":
+            specs["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), dt)
+        return specs
+
+    # decode: one token + cache of length seq_len
+    from repro.models import model as model_lib
+    cache = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, b, s, dt))
+    return {"tokens": _sds((b, 1), jnp.int32), "cache": cache}

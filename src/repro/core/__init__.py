@@ -1,0 +1,26 @@
+"""Core reproduction of 'Scheduling Deep Learning Jobs in Multi-Tenant GPU
+Clusters via Wise Resource Sharing' (SJF-BSBF)."""
+from .batch_scaling import SharingConfig, best_sharing_config
+from .interference import InterferenceModel, paper_interference_model
+from .job import ClusterState, Job, JobState
+from .pair import PairDecision, PairJob, best_pair_schedule, pair_timeline
+from .perf_model import (GPU_2080TI, TPU_V5E, HardwareSpec, PerfParams,
+                         derive_perf_params, fit_comp_params, infer_xi,
+                         ring_allreduce_bytes)
+from .schedulers import (ALL_POLICIES, FIFO, SJF, SJF_BSBF, SJF_FFS, SRSF,
+                         PolluxLike, Tiresias, make_scheduler)
+from .simulator import SchedulerBase, SimResults, Simulator
+from .tasks import PAPER_TASK_PROFILES, TaskProfile, profile_from_arch
+from .trace import TraceConfig, generate_trace, physical_trace, simulation_trace
+
+__all__ = [
+    "ALL_POLICIES", "ClusterState", "FIFO", "GPU_2080TI", "HardwareSpec",
+    "InterferenceModel", "Job", "JobState", "PAPER_TASK_PROFILES",
+    "PairDecision", "PairJob", "PerfParams", "PolluxLike", "SJF", "SJF_BSBF", "SRSF",
+    "SJF_FFS", "SchedulerBase", "SharingConfig", "SimResults", "Simulator",
+    "TPU_V5E", "TaskProfile", "Tiresias", "TraceConfig",
+    "best_pair_schedule", "best_sharing_config", "derive_perf_params",
+    "fit_comp_params", "generate_trace", "infer_xi", "make_scheduler",
+    "pair_timeline", "paper_interference_model", "physical_trace",
+    "profile_from_arch", "ring_allreduce_bytes", "simulation_trace",
+]

@@ -1,0 +1,78 @@
+"""Algorithm 2 — Batch Size Scaling with Best Sharing Benefit.
+
+Given a running job and a new job that would share the running job's GPUs,
+sweep the new job's per-GPU sub-batch b over {B, B/2, B/4, ..., 1}
+(gradient accumulation supplies s = B/b to keep the *effective* batch, and
+hence convergence, unchanged), check memory feasibility of the pair, apply
+Theorem 1 per candidate, and return the best (SF, b, t_bar).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from .interference import InterferenceModel
+from .job import Job
+from .pair import PairDecision, PairJob, best_pair_schedule
+
+
+@dataclass(frozen=True)
+class SharingConfig:
+    share: bool                 # SF
+    sub_batch: int              # b (new job's per-GPU sub-batch)
+    accum_steps: int            # s = B / b
+    avg_jct: float              # t_bar
+    decision: Optional[PairDecision]
+    xi_new: float = 1.0
+    xi_run: float = 1.0
+
+
+def candidate_sub_batches(batch: int) -> list[int]:
+    """B, B/2, ..., 1 (powers-of-two steps, as in Algorithm 2)."""
+    out = []
+    b = batch
+    while b >= 1:
+        out.append(int(b))
+        if b == 1:
+            break
+        b = math.ceil(b / 2)
+    return out
+
+
+def best_sharing_config(
+    running: Job,
+    new: Job,
+    interference: InterferenceModel,
+    gpu_capacity_bytes: float,
+) -> SharingConfig:
+    """Algorithm 2. ``running`` keeps its current sub-batch (the paper does
+    not re-tune the running job); only the new job's b is swept."""
+    run_mem = running.perf.mem_bytes(running.sub_batch)
+    best: Optional[SharingConfig] = None
+
+    for b in candidate_sub_batches(new.batch):
+        s = max(1, int(round(new.batch / b)))
+        if not new.perf.fits(b, gpu_capacity_bytes, other_mem=run_mem):
+            continue  # pair does not fit device memory at this sub-batch
+        t_new = new.perf.t_iter(new.batch, s)
+        t_run = running.perf.t_iter(running.batch, running.accum_steps)
+        mem_frac = (run_mem + new.perf.mem_bytes(b)) / gpu_capacity_bytes
+        xi_run = interference.xi(running.model, new.model,
+                                 t_me=t_run, t_other=t_new, mem_frac=mem_frac)
+        xi_new = interference.xi(new.model, running.model,
+                                 t_me=t_new, t_other=t_run, mem_frac=mem_frac)
+        a = PairJob(t_iter=t_run, iters=running.remaining_iters, xi=xi_run)
+        bb = PairJob(t_iter=t_new, iters=new.iters, xi=xi_new)
+        dec = best_pair_schedule(a, bb)
+        cfg = SharingConfig(
+            share=dec.share, sub_batch=b, accum_steps=s,
+            avg_jct=dec.avg_jct, decision=dec, xi_new=xi_new, xi_run=xi_run,
+        )
+        if best is None or cfg.avg_jct < best.avg_jct:
+            best = cfg
+
+    if best is None:
+        # No sub-batch fits next to the running job -> cannot share.
+        return SharingConfig(False, new.batch, 1, float("inf"), None)
+    return best

@@ -1,0 +1,129 @@
+"""Step-interleaved co-scheduled execution — the TPU analogue of the
+paper's GPU sharing (DESIGN.md §4).
+
+A TPU core runs one program at a time (no MPS/time-slicing), so "two jobs
+share a slice" becomes ONE jitted SPMD program that advances both jobs'
+training states each call: job A runs its step, then job B runs its
+(possibly gradient-accumulated, sub-batched) step. The interference ratio
+of Eqs. 5-6 is then *structural*:
+
+    xi_A = t_pair / t_A_solo      (and symmetrically for B)
+
+with t_pair >= t_A + t_B for pure time multiplexing; the measured ratios
+feed the scheduler's ``InterferenceModel`` exactly as the paper feeds
+measured 2080 Ti ratios into its simulator.
+
+This module is also the "physical testbed": `measure_pair` really trains
+two models on this host and times the fused program.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.data import make_batch
+from repro.models import init_params
+from repro.train import TrainConfig, adamw_init, make_train_step
+
+from .interference import InterferenceModel
+
+
+@dataclass
+class JobSpec:
+    cfg: ArchConfig
+    batch: int                  # per-step user batch
+    accum_steps: int = 1        # gradient-accumulation sub-steps
+    seq: int = 128
+    seed: int = 0
+
+    def train_config(self) -> TrainConfig:
+        return TrainConfig(accum_steps=self.accum_steps)
+
+
+def _make_state(spec: JobSpec):
+    params = init_params(spec.cfg, jax.random.PRNGKey(spec.seed))
+    opt = adamw_init(params)
+    batch = make_batch(spec.cfg, spec.batch, spec.seq, seed=spec.seed)
+    return params, opt, batch
+
+
+def make_pair_step(spec_a: JobSpec, spec_b: JobSpec):
+    """One jitted program stepping BOTH jobs (time-multiplexed)."""
+    step_a = make_train_step(spec_a.cfg, spec_a.train_config())
+    step_b = make_train_step(spec_b.cfg, spec_b.train_config())
+
+    @jax.jit
+    def pair_step(pa, oa, ba, pb, ob, bb):
+        pa, oa, ma = step_a(pa, oa, ba)
+        pb, ob, mb = step_b(pb, ob, bb)
+        return pa, oa, ma, pb, ob, mb
+
+    return pair_step
+
+
+def _time_fn(fn, args, iters: int, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def measure_solo(spec: JobSpec, iters: int = 3) -> float:
+    """Mean seconds per solo training step."""
+    params, opt, batch = _make_state(spec)
+    step = jax.jit(make_train_step(spec.cfg, spec.train_config()))
+    return _time_fn(step, (params, opt, batch), iters)
+
+
+def measure_pair(spec_a: JobSpec, spec_b: JobSpec,
+                 iters: int = 3) -> Dict[str, float]:
+    """Times the interleaved pair program and returns solo/pair times and
+    the structural interference ratios xi_A, xi_B."""
+    t_a = measure_solo(spec_a, iters)
+    t_b = measure_solo(spec_b, iters)
+    pa, oa, ba = _make_state(spec_a)
+    pb, ob, bb = _make_state(spec_b)
+    pair = make_pair_step(spec_a, spec_b)
+    t_pair = _time_fn(pair, (pa, oa, ba, pb, ob, bb), iters)
+    return {
+        "t_a_solo": t_a,
+        "t_b_solo": t_b,
+        "t_pair": t_pair,
+        "xi_a": t_pair / t_a,
+        "xi_b": t_pair / t_b,
+    }
+
+
+def structural_xi(t_me: float, t_other: float, *, overlap: float = 0.0,
+                  mem_frac: float = 0.0, hbm_pressure: float = 0.15
+                  ) -> float:
+    """Analytic structural model (no execution): strict time multiplexing
+    gives xi_me = (t_me + t_other) / t_me; ``overlap`` in [0,1) credits
+    pipelined overlap between the two programs' compute and collectives;
+    an HBM-pressure term penalizes near-capacity working sets."""
+    xi = (t_me + (1.0 - overlap) * t_other) / t_me
+    if mem_frac > 0.8:
+        xi += hbm_pressure * (mem_frac - 0.8) / 0.2
+    return xi
+
+
+def calibrate_interference(specs: Dict[str, JobSpec], iters: int = 2,
+                           ) -> InterferenceModel:
+    """Fill an InterferenceModel table from real pairwise measurements on
+    this host (the 'physical' calibration pass of Section VI-A)."""
+    model = InterferenceModel()
+    names = sorted(specs)
+    for i, a in enumerate(names):
+        for b in names[i:]:
+            r = measure_pair(specs[a], specs[b], iters=iters)
+            model.set_pair(a, b, r["xi_a"], r["xi_b"])
+    return model

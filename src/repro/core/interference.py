@@ -1,0 +1,103 @@
+"""Interference model — the xi ratios of Eqs. 5-6.
+
+The paper measures xi per job pair on 2080 Ti GPUs (Fig. 3) and observes a
+range up to ~6x. Without GPUs we provide:
+
+  * a structural model for step-interleaved co-scheduling on a TPU slice
+    (DESIGN.md §4): two jobs alternating (micro-)steps see
+        xi_A ~= 1 + r * (t_B_sub / t_A_sub)
+    where r in [0,1] is the overlap/contention coefficient (r=1 is strict
+    time multiplexing) plus an HBM-pressure correction; and
+
+  * a calibration table keyed by (model_a, model_b) that benchmarks can
+    fill from "physical" CPU interleave measurements or paper-like values,
+    plus a global override used for the Fig. 6b sweep.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+Key = Tuple[str, str]
+
+
+@dataclass
+class InterferenceModel:
+    """Returns (xi_for_me, xi_for_other) when ``me`` shares GPUs with
+    ``other``. Priority: global override > pair table > structural model."""
+
+    # contention coefficient of the structural model; r=1 -> pure
+    # time-multiplexing (xi_A = 1 + t_B/t_A), r<1 -> partial overlap.
+    contention: float = 0.35
+    # extra slowdown when combined working set approaches HBM capacity
+    hbm_pressure: float = 0.15
+    table: Dict[Key, Tuple[float, float]] = field(default_factory=dict)
+    global_xi: Optional[float] = None   # Fig. 6b style injection
+
+    def set_pair(self, a: str, b: str, xi_a: float, xi_b: float) -> None:
+        self.table[(a, b)] = (xi_a, xi_b)
+        self.table[(b, a)] = (xi_b, xi_a)
+
+    def xi(
+        self,
+        me: str,
+        other: str,
+        *,
+        t_me: float = 1.0,
+        t_other: float = 1.0,
+        mem_frac: float = 0.0,
+    ) -> float:
+        """Interference ratio applied to ``me``'s iteration time.
+
+        ``t_me``/``t_other`` are the solo iteration times (used by the
+        structural model), ``mem_frac`` the fraction of device memory used
+        by the pair together."""
+        if self.global_xi is not None:
+            return self.global_xi
+        hit = self.table.get((me, other))
+        if hit is not None:
+            return hit[0]
+        ratio = t_other / max(t_me, 1e-12)
+        xi = 1.0 + self.contention * min(ratio, 4.0)
+        if mem_frac > 0.8:
+            xi += self.hbm_pressure * (mem_frac - 0.8) / 0.2
+        return xi
+
+
+# Paper-like pair table for the six Pollux/paper DL tasks. The paper does
+# not publish the raw xi matrix; these values are synthesized to match the
+# reported qualitative structure (range up to ~6, compute-bound pairs ~1.6-2,
+# comm-bound pairs lighter, memory-heavy pairs severe). Used by the
+# paper-faithful benchmarks; the Fig. 6b sweep overrides them globally.
+PAPER_TASKS = ("bert", "cifar10", "deepspeech2", "imagenet", "ncf", "yolov3")
+
+
+def paper_interference_model() -> InterferenceModel:
+    m = InterferenceModel()
+    base = {
+        # (a, b): xi_a when a shares with b  (diagonal = self-pairing).
+        # Mostly mild (1.1-1.5); a few bad pairings (compute-saturating
+        # YoloV3/ImageNet combos) reach 2-6x, matching the reported range.
+        ("bert", "bert"): 1.55, ("bert", "cifar10"): 1.15,
+        ("bert", "deepspeech2"): 1.30, ("bert", "imagenet"): 1.45,
+        ("bert", "ncf"): 1.20, ("bert", "yolov3"): 1.80,
+        ("cifar10", "cifar10"): 1.12, ("cifar10", "bert"): 1.25,
+        ("cifar10", "deepspeech2"): 1.20, ("cifar10", "imagenet"): 1.30,
+        ("cifar10", "ncf"): 1.10, ("cifar10", "yolov3"): 1.45,
+        ("deepspeech2", "deepspeech2"): 1.40, ("deepspeech2", "bert"): 1.35,
+        ("deepspeech2", "cifar10"): 1.18, ("deepspeech2", "imagenet"): 1.35,
+        ("deepspeech2", "ncf"): 1.15, ("deepspeech2", "yolov3"): 1.60,
+        ("imagenet", "imagenet"): 1.75, ("imagenet", "bert"): 1.50,
+        ("imagenet", "cifar10"): 1.25, ("imagenet", "deepspeech2"): 1.40,
+        ("imagenet", "ncf"): 1.18, ("imagenet", "yolov3"): 2.30,
+        ("ncf", "ncf"): 1.15, ("ncf", "bert"): 1.25,
+        ("ncf", "cifar10"): 1.10, ("ncf", "deepspeech2"): 1.18,
+        ("ncf", "imagenet"): 1.30, ("ncf", "yolov3"): 1.40,
+        ("yolov3", "yolov3"): 5.8, ("yolov3", "bert"): 1.95,
+        ("yolov3", "cifar10"): 1.50, ("yolov3", "deepspeech2"): 1.75,
+        ("yolov3", "imagenet"): 2.60, ("yolov3", "ncf"): 1.45,
+    }
+    for (a, b), xi_a in base.items():
+        xi_b = base.get((b, a), xi_a)
+        m.table[(a, b)] = (xi_a, xi_b)
+    return m

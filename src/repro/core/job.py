@@ -1,0 +1,177 @@
+"""Job and cluster state for the scheduling model (Section IV)."""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+from .perf_model import PerfParams, ring_allreduce_bytes
+
+
+class JobState(enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    SUSPENDED = "suspended"   # only preemptive baselines use this
+    FINISHED = "finished"
+
+
+@dataclass
+class Job:
+    """One DDL training job J_k (Table I notation in comments)."""
+
+    jid: int
+    model: str                  # DL task name (indexes the xi table)
+    arrival: float              # a_k
+    gpus: int                   # G_k
+    iters: float                # I_k
+    batch: int                  # B_k - user-requested per-GPU batch size
+    perf: PerfParams            # Eq. 3/4/7 coefficients at G_k workers
+
+    # --- mutable scheduling state -------------------------------------
+    state: JobState = JobState.PENDING
+    placement: FrozenSet[int] = frozenset()     # GPU ids
+    sub_batch: int = 0          # chosen per-GPU sub-batch (Algorithm 2)
+    accum_steps: int = 1        # s = batch / sub_batch
+    start_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    first_start_time: Optional[float] = None
+    iters_done: float = 0.0
+    last_progress_at: float = 0.0
+    current_rate: float = 0.0   # iterations / second right now
+    preemptions: int = 0
+    attained_service: float = 0.0   # gpus * seconds (Tiresias)
+    alloc_gpus: Optional[int] = None  # elastic allocation (Pollux-like only)
+    waiting_time: float = 0.0       # total time not holding GPUs (queue + preempted)
+
+    def __post_init__(self) -> None:
+        if self.sub_batch == 0:
+            self.sub_batch = self.batch
+
+    # ------------------------------------------------------------------ #
+    @property
+    def solo_t_iter(self) -> float:
+        return self.perf.t_iter(self.batch, self.accum_steps)
+
+    def base_t_iter(self) -> float:
+        """Iteration time in *user iterations* given the current elastic
+        allocation (equals ``solo_t_iter`` unless a Pollux-like scheduler
+        resized the job). Weak scaling: per-GPU batch fixed, progress
+        normalized so that n workers advance n/G_k user iterations per
+        physical iteration (same total samples => same convergence)."""
+        n = self.alloc_gpus or self.gpus
+        if n == self.gpus:
+            return self.solo_t_iter
+        p = self.perf
+        sub = self.batch / self.accum_steps
+        tc = p.t_comp(sub)
+        tn = (p.alpha_comm * max(1, math.ceil(math.log2(max(2, n))))
+              + p.beta_comm * ring_allreduce_bytes(p.param_bytes, n))
+        d = p.delta
+        t_phys = (self.accum_steps - 1) * tc + (tc ** d + tn ** d) ** (1.0 / d)
+        return t_phys * self.gpus / n
+
+    def t_iter_at(self, sub_batch: int) -> float:
+        s = max(1, int(round(self.batch / max(1, sub_batch))))
+        return self.perf.t_iter(self.batch, s)
+
+    @property
+    def remaining_iters(self) -> float:
+        return max(0.0, self.iters - self.iters_done)
+
+    @property
+    def expected_remaining_time(self) -> float:
+        """L_k = t_iter * remaining iterations (solo estimate, used by SJF)."""
+        return self.solo_t_iter * self.remaining_iters
+
+    @property
+    def service_size(self) -> float:
+        """Job 'size' used for the large/small split in Tables III-IV."""
+        return self.gpus
+
+    def jct(self) -> float:
+        if self.finish_time is None:
+            raise RuntimeError(f"job {self.jid} not finished")
+        return self.finish_time - self.arrival
+
+    def queueing_delay(self) -> float:
+        """Total time spent without GPUs (initial queueing + time spent
+        re-queued after preemption) — the paper's 'queuing delay', which
+        charges preemptive policies for their migrations."""
+        return self.waiting_time
+
+    def first_start_delay(self) -> float:
+        if self.first_start_time is None:
+            raise RuntimeError(f"job {self.jid} never started")
+        return self.first_start_time - self.arrival
+
+
+@dataclass
+class ClusterState:
+    """Servers x GPUs with <= C jobs per GPU (C=2 in the paper)."""
+
+    n_servers: int
+    gpus_per_server: int
+    max_jobs_per_gpu: int = 2
+    gpu_capacity_bytes: float = 16 * 2**30
+
+    occupancy: Dict[int, List[int]] = field(default_factory=dict)  # gpu -> [jid]
+
+    def __post_init__(self) -> None:
+        for g in range(self.n_gpus):
+            self.occupancy.setdefault(g, [])
+
+    @property
+    def n_gpus(self) -> int:
+        return self.n_servers * self.gpus_per_server
+
+    def server_of(self, gpu: int) -> int:
+        return gpu // self.gpus_per_server
+
+    # ------------------------------------------------------------------ #
+    def free_gpus(self) -> List[int]:
+        return [g for g in range(self.n_gpus) if not self.occupancy[g]]
+
+    def single_occupancy_gpus(self) -> List[int]:
+        return [g for g in range(self.n_gpus) if len(self.occupancy[g]) == 1]
+
+    def jobs_on(self, gpu: int) -> List[int]:
+        return list(self.occupancy[gpu])
+
+    def consolidated_pick(self, candidates: List[int], k: int) -> List[int]:
+        """Pick ``k`` GPUs from ``candidates`` packed onto as few servers as
+        possible (the paper's 'as consolidated on the nodes as possible')."""
+        by_server: Dict[int, List[int]] = {}
+        for g in candidates:
+            by_server.setdefault(self.server_of(g), []).append(g)
+        # Prefer servers with the most candidate GPUs; stable by server id.
+        order = sorted(by_server.items(), key=lambda kv: (-len(kv[1]), kv[0]))
+        picked: List[int] = []
+        for _, gpus in order:
+            for g in sorted(gpus):
+                picked.append(g)
+                if len(picked) == k:
+                    return picked
+        return picked  # may be < k; caller checks
+
+    def allocate(self, jid: int, gpus: FrozenSet[int]) -> None:
+        for g in gpus:
+            occ = self.occupancy[g]
+            if len(occ) >= self.max_jobs_per_gpu:
+                raise RuntimeError(f"GPU {g} already holds {occ}")
+            occ.append(jid)
+
+    def release(self, jid: int, gpus: FrozenSet[int]) -> None:
+        for g in gpus:
+            occ = self.occupancy[g]
+            if jid not in occ:
+                raise RuntimeError(f"GPU {g} does not hold job {jid}")
+            occ.remove(jid)
+
+    def co_runners(self, job: Job) -> Set[int]:
+        others: Set[int] = set()
+        for g in job.placement:
+            for j in self.occupancy[g]:
+                if j != job.jid:
+                    others.add(j)
+        return others

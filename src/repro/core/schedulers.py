@@ -1,0 +1,338 @@
+"""Scheduling policies of Section VI-A.
+
+* FIFO           — strict arrival order, exclusive GPUs, head-of-line blocks.
+* SJF            — shortest-remaining-solo-time first, exclusive GPUs.
+* Tiresias       — preemptive discretized-2Q LAS (attained service =
+                   gpus x seconds), restart penalty on resume.
+* PolluxLike     — preemptive elastic baseline: periodic marginal-gain GPU
+                   reallocation on each job's speedup curve (user batch kept
+                   fixed; see DESIGN.md §8).
+* SJF-FFS        — SJF + aggressive first-fit GPU sharing (no benefit check).
+* SJF-BSBF       — the paper's Algorithm 1 (+ Algorithm 2 / Theorem 1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+from .batch_scaling import best_sharing_config, candidate_sub_batches
+from .job import ClusterState, Job, JobState
+from .simulator import SchedulerBase, Simulator
+
+
+# ---------------------------------------------------------------------- #
+# helpers
+# ---------------------------------------------------------------------- #
+def solo_sub_batch(job: Job, capacity: float) -> Optional[int]:
+    """Largest power-of-two sub-batch that fits device memory alone
+    (gradient accumulation supplies the rest)."""
+    for b in candidate_sub_batches(job.batch):
+        if job.perf.fits(b, capacity):
+            return b
+    return None
+
+
+def shared_sub_batch(job: Job, capacity: float, other_mem: float) -> Optional[int]:
+    for b in candidate_sub_batches(job.batch):
+        if job.perf.fits(b, capacity, other_mem=other_mem):
+            return b
+    return None
+
+
+def _start_exclusive(sim: Simulator, job: Job) -> bool:
+    free = sim.cluster.free_gpus()
+    want = job.alloc_gpus or job.gpus
+    if len(free) < want:
+        return False
+    sub = solo_sub_batch(job, sim.cluster.gpu_capacity_bytes)
+    if sub is None:
+        raise RuntimeError(f"job {job.jid} cannot fit memory even at b=1")
+    gpus = sim.cluster.consolidated_pick(free, want)
+    sim.start_job(job, gpus, sub_batch=sub)
+    return True
+
+
+# ---------------------------------------------------------------------- #
+class FIFO(SchedulerBase):
+    name = "fifo"
+
+    def schedule(self, sim: Simulator) -> None:
+        for job in sorted(sim.pending, key=lambda j: (j.arrival, j.jid)):
+            if not _start_exclusive(sim, job):
+                break  # strict FIFO: head-of-line blocks the queue
+
+
+class SJF(SchedulerBase):
+    """Shortest-job-first, exclusive GPUs, strict priority order: if the
+    currently-shortest job cannot be placed, later jobs wait (no backfill —
+    matching the queueing structure the paper reports for SJF)."""
+
+    name = "sjf"
+
+    def schedule(self, sim: Simulator) -> None:
+        order = sorted(sim.pending,
+                       key=lambda j: (j.expected_remaining_time, j.jid))
+        for job in order:
+            if not _start_exclusive(sim, job):
+                break
+
+
+# ---------------------------------------------------------------------- #
+class Tiresias(SchedulerBase):
+    """Discretized two-queue least-attained-service, preemptive."""
+
+    name = "tiresias"
+    preemptive = True
+
+    def __init__(self, threshold_gpu_seconds: float = 3600.0,
+                 tick_interval: float = 60.0) -> None:
+        self.threshold = threshold_gpu_seconds
+        self.tick_interval = tick_interval
+
+    def schedule(self, sim: Simulator) -> None:
+        active: List[Job] = list(sim.running.values()) + list(sim.pending)
+        if not active:
+            return
+        queue = lambda j: 0 if j.attained_service < self.threshold else 1
+        order = sorted(active, key=lambda j: (queue(j), j.arrival, j.jid))
+        total = sim.cluster.n_gpus
+        chosen: List[Job] = []
+        cap = total
+        for j in order:
+            if j.gpus <= cap:
+                chosen.append(j)
+                cap -= j.gpus
+        chosen_ids = {j.jid for j in chosen}
+        for j in list(sim.running.values()):
+            if j.jid not in chosen_ids:
+                sim.preempt_job(j)
+        for j in chosen:
+            if j.state == JobState.PENDING:
+                _start_exclusive(sim, j)
+
+
+# ---------------------------------------------------------------------- #
+class SRSF(SchedulerBase):
+    """Clairvoyant shortest-remaining-service-first (the policy Tiresias
+    approximates without duration knowledge; Tiresias paper shows SRSF is
+    near-optimal when durations are known). Preemptive: whenever a job
+    with smaller remaining service (gpus x remaining seconds) arrives, it
+    may evict enough larger jobs to run."""
+
+    name = "srsf"
+    preemptive = True
+
+    def schedule(self, sim: Simulator) -> None:
+        active: List[Job] = list(sim.running.values()) + list(sim.pending)
+        if not active:
+            return
+        service = lambda j: j.gpus * j.expected_remaining_time
+        order = sorted(active, key=lambda j: (service(j), j.jid))
+        cap = sim.cluster.n_gpus
+        chosen: List[Job] = []
+        for j in order:
+            if j.gpus <= cap:
+                chosen.append(j)
+                cap -= j.gpus
+        chosen_ids = {j.jid for j in chosen}
+        for j in list(sim.running.values()):
+            if j.jid not in chosen_ids:
+                sim.preempt_job(j)
+        for j in chosen:
+            if j.state == JobState.PENDING:
+                _start_exclusive(sim, j)
+
+
+# ---------------------------------------------------------------------- #
+class PolluxLike(SchedulerBase):
+    """Elastic preemptive baseline: every tick, reassign GPU counts by
+    greedy marginal goodput gain, capped at each job's requested G_k
+    (the real Pollux can also overshoot and retune batch size; we keep the
+    user batch to mirror the accuracy-preserving comparison in the paper)."""
+
+    name = "pollux"
+    preemptive = True
+    tick_only = True   # real Pollux acts on a fixed optimization interval
+
+    def __init__(self, tick_interval: float = 60.0,
+                 min_gpus: int = 1) -> None:
+        self.tick_interval = tick_interval
+        self.min_gpus = min_gpus
+
+    @staticmethod
+    def _rate(job: Job, n: int) -> float:
+        """User-iterations/sec at allocation n (weak scaling)."""
+        if n <= 0:
+            return 0.0
+        p = job.perf
+        sub = job.batch / job.accum_steps
+        tc = p.t_comp(sub)
+        tn = (p.alpha_comm * max(1, math.ceil(math.log2(max(2, n))))
+              + p.beta_comm * 2.0 * p.param_bytes * (n - 1) / n)
+        d = p.delta
+        t_phys = (job.accum_steps - 1) * tc + (tc ** d + tn ** d) ** (1 / d)
+        return (n / job.gpus) / t_phys
+
+    def schedule(self, sim: Simulator) -> None:
+        active: List[Job] = list(sim.running.values()) + list(sim.pending)
+        if not active:
+            return
+        total = sim.cluster.n_gpus
+        # Fair-share allocation in powers of two up to G_k (Pollux optimizes
+        # goodput *subject to fairness*; fair shares, then goodput-aware
+        # upgrades for whoever is furthest below its request).
+        alloc: Dict[int, int] = {j.jid: 0 for j in active}
+        levels = lambda j: [n for n in (1, 2, 4, 8, 12, 16, 24, 32)
+                            if n <= j.gpus] or [j.gpus]
+        budget = total
+        order = sorted(active, key=lambda j: (j.arrival, j.jid))
+        for j in order:
+            first = levels(j)[0]
+            if budget >= first:
+                alloc[j.jid] = first
+                budget -= first
+        upgraded = True
+        while upgraded and budget > 0:
+            upgraded = False
+            # furthest below fair share first; break ties by marginal rate
+            cands = []
+            for j in active:
+                cur = alloc[j.jid]
+                if cur == 0:
+                    continue
+                nxt = next((n for n in levels(j) if n > cur), None)
+                if nxt is None or nxt - cur > budget:
+                    continue
+                gain = (self._rate(j, nxt) - self._rate(j, cur)) / (nxt - cur)
+                cands.append((cur / j.gpus, -gain, j.jid, j, nxt))
+            if cands:
+                cands.sort()
+                _, _, _, j, nxt = cands[0]
+                budget -= nxt - alloc[j.jid]
+                alloc[j.jid] = nxt
+                upgraded = True
+
+        # Apply: preempt mismatched running jobs, then start.
+        for j in list(sim.running.values()):
+            if alloc.get(j.jid, 0) != (j.alloc_gpus or j.gpus):
+                sim.preempt_job(j)
+        for j in sorted(sim.pending, key=lambda x: (x.arrival, x.jid)):
+            n = alloc.get(j.jid, 0)
+            if n <= 0:
+                continue
+            free = sim.cluster.free_gpus()
+            if len(free) < n:
+                continue
+            j.alloc_gpus = n
+            sub = solo_sub_batch(j, sim.cluster.gpu_capacity_bytes)
+            gpus = sim.cluster.consolidated_pick(free, n)
+            sim.start_job(j, gpus, sub_batch=sub)
+
+
+# ---------------------------------------------------------------------- #
+class SJF_FFS(SchedulerBase):
+    """SJF + first-fit sharing: when free GPUs are insufficient, greedily
+    take single-occupancy GPUs (no Theorem-1 benefit check) — the paper's
+    comparison baseline showing that *wise* sharing matters."""
+
+    name = "sjf-ffs"
+
+    def schedule(self, sim: Simulator) -> None:
+        cap = sim.cluster.gpu_capacity_bytes
+        order = sorted(sim.pending,
+                       key=lambda j: (j.expected_remaining_time, j.jid))
+        for job in order:
+            if _start_exclusive(sim, job):
+                continue
+            free = sim.cluster.free_gpus()
+            singles = sim.cluster.single_occupancy_gpus()
+            if len(free) + len(singles) < job.gpus:
+                continue
+            # first fit: free GPUs first, then single-occupancy in id order
+            chosen = list(free)
+            max_other_mem = 0.0
+            for g in singles:
+                if len(chosen) >= job.gpus:
+                    break
+                other = sim.jobs[sim.cluster.occupancy[g][0]]
+                max_other_mem = max(
+                    max_other_mem, other.perf.mem_bytes(other.sub_batch))
+                chosen.append(g)
+            if len(chosen) < job.gpus:
+                continue
+            chosen = chosen[:job.gpus]
+            sub = shared_sub_batch(job, cap, max_other_mem)
+            if sub is None:
+                continue  # does not fit next to the co-runners
+            sim.start_job(job, chosen, sub_batch=sub)
+
+
+# ---------------------------------------------------------------------- #
+class SJF_BSBF(SchedulerBase):
+    """Algorithm 1 — Shortest Job First with Best Sharing Benefit First."""
+
+    name = "sjf-bsbf"
+
+    def schedule(self, sim: Simulator) -> None:
+        cap = sim.cluster.gpu_capacity_bytes
+        order = sorted(sim.pending,
+                       key=lambda j: (j.expected_remaining_time, j.jid))
+        for job in order:
+            # Lines 6-8: enough free GPUs -> exclusive consolidated pick.
+            if _start_exclusive(sim, job):
+                continue
+            free = sim.cluster.free_gpus()
+            singles = sim.cluster.single_occupancy_gpus()
+            if len(free) + len(singles) < job.gpus:
+                continue  # Line 9 fails: stay pending
+            # Lines 10-13: evaluate every running job owning single-occupancy
+            # GPUs with Algorithm 2; keep those with sharing benefit.
+            donor_jids = {sim.cluster.occupancy[g][0] for g in singles}
+            donors = []
+            for jid in donor_jids:
+                run = sim.jobs[jid]
+                cfg = best_sharing_config(run, job, sim.interference, cap)
+                if cfg.share:
+                    donors.append((cfg, run))
+            if not donors:
+                continue  # SF False for all pairs: defer (put back in pool)
+            # Line 14: sort candidate pairs by pair-JCT ascending.
+            donors.sort(key=lambda t: (t[0].avg_jct, t[1].jid))
+            # Lines 15-17: take donors' GPUs until the request is met
+            # (shared GPUs first — they pace the job — then free ones).
+            chosen: List[int] = []
+            sub = job.batch
+            for cfg, run in donors:
+                if len(chosen) >= job.gpus:
+                    break
+                for g in sorted(run.placement):
+                    if len(sim.cluster.occupancy[g]) == 1:
+                        chosen.append(g)
+                        if len(chosen) >= job.gpus:
+                            break
+                sub = min(sub, cfg.sub_batch)
+            if len(chosen) < job.gpus:
+                chosen.extend(free[: job.gpus - len(chosen)])
+            if len(chosen) < job.gpus:
+                continue
+            chosen = chosen[:job.gpus]
+            sim.start_job(job, chosen, sub_batch=sub)
+
+
+ALL_POLICIES = {
+    "fifo": FIFO,
+    "sjf": SJF,
+    "srsf": SRSF,
+    "tiresias": Tiresias,
+    "pollux": PolluxLike,
+    "sjf-ffs": SJF_FFS,
+    "sjf-bsbf": SJF_BSBF,
+}
+
+
+def make_scheduler(name: str, **kwargs) -> SchedulerBase:
+    try:
+        return ALL_POLICIES[name](**kwargs)
+    except KeyError:
+        raise ValueError(f"unknown policy {name!r}; "
+                         f"choose from {sorted(ALL_POLICIES)}") from None

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot spots (flash attention, Mamba2
+SSD chunk scan), each with a pure-jnp oracle in ``ref.py`` and a jit'd
+wrapper in ``ops.py``. Validated with ``interpret=True`` on CPU."""
+from . import ops
+from . import ref
+
+# module aliases used by the model code
+flash_attention_ops = ops
+mamba2_ops = ops
+
+__all__ = ["flash_attention_ops", "mamba2_ops", "ops", "ref"]

@@ -1,0 +1,98 @@
+"""Mamba2 SSD chunk-scan Pallas TPU kernel.
+
+Grid: (B, H, n_chunks) — chunks innermost, so the inter-chunk state
+(P, N) persists in VMEM scratch across chunk steps (TPU grid order is
+sequential over the last dimension). Per chunk the kernel computes the
+intra-chunk attention-like term (an (L, L) masked matmul on the MXU), the
+inter-chunk contribution from the carried state, and the state update —
+exactly the structure of ``repro.models.ssm.ssd_chunked`` (the jnp
+reference path used by the model on CPU).
+
+VMEM working set per step at L=256, P=64, N=64:
+  x/dt/dA/B/C blocks + (L,L) decay f32 + state (P,N) f32 ~= 0.6 MiB.
+All matmul dims are multiples of 64/128 -> MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, dA_ref, b_ref, c_ref, y_ref, state_ref, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (L, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (L,)
+    dA = dA_ref[0, 0].astype(jnp.float32)        # (L,)  (<= 0)
+    Bm = b_ref[0].astype(jnp.float32)            # (L, N)
+    Cm = c_ref[0].astype(jnp.float32)            # (L, N)
+
+    cum = jnp.cumsum(dA)                         # (L,)
+    total = cum[-1]
+    # intra-chunk: masked decay * (C B^T)
+    diff = cum[:, None] - cum[None, :]           # (L, L)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(jnp.where(ii >= jj, diff, NEG_INF))
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)
+    m = scores * decay                           # (L, L)
+    xdt = x * dt[:, None]                        # (L, P)
+    y_intra = jnp.dot(m, xdt, preferred_element_type=jnp.float32)
+    # inter-chunk from carried state (P, N)
+    state = state_ref[...]
+    y_inter = jnp.dot(Cm, state.T,
+                      preferred_element_type=jnp.float32) \
+        * jnp.exp(cum)[:, None]                  # (L, P)
+    # state update
+    w = jnp.exp(total - cum) * dt                # (L,)
+    s_local = jnp.dot((x * w[:, None]).T, Bm,
+                      preferred_element_type=jnp.float32)   # (P, N)
+    state_ref[...] = jnp.exp(total) * state + s_local
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+def ssd_fwd(x, dt, A, Bm, Cm, *, chunk=256, interpret=False):
+    """x: (B,S,H,P), dt: (B,S,H), A: (H,), Bm/Cm: (B,S,N) -> y (B,S,H,P).
+
+    Same contract as ``repro.models.ssm.ssd_chunked`` /
+    ``repro.kernels.ref.ssd_ref``.
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    # layout: (B, H, S, *) with chunks innermost in the grid
+    xr = x.transpose(0, 2, 1, 3)                     # (B,H,S,P)
+    dtr = dt.transpose(0, 2, 1)                      # (B,H,S)
+    dAr = (A[None, :, None] * dtr).astype(jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda bi, hi, ci: (bi, hi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, dAr, Bm, Cm)
+    return y.transpose(0, 2, 1, 3)                   # (B,S,H,P)

@@ -1,0 +1,36 @@
+"""Jit-able wrappers choosing kernel vs interpret mode by backend.
+
+On TPU the Pallas kernels compile natively; on CPU (this container) they
+execute in ``interpret=True`` mode — the kernel body runs as traced jnp,
+bit-matching the TPU algorithm for validation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_fwd
+from .mamba2_scan import ssd_fwd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0,
+                    block_q=128, block_k=128):
+    """q/k/v: (B, S, H, D) (model layout) -> (B, S, H, D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k,
+                              interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk=256):
+    """Mamba2 SSD: x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N)."""
+    return ssd_fwd(x, dt, A, Bm, Cm, chunk=chunk, interpret=_interpret())

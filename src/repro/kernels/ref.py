@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are deliberately the *naive* formulations (full softmax attention;
+strictly sequential SSD recurrence) so kernel tests compare against an
+implementation whose correctness is obvious.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q/k/v: (B, H, S, D). Full-softmax reference."""
+    b, h, s, d = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * d ** -0.5
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Sequential Mamba2/SSD recurrence (the obviously-correct oracle).
+
+    x: (B,S,H,P), dt: (B,S,H), A: (H,) (<0), Bm/Cm: (B,S,N).
+    h_t = exp(A*dt_t) h_{t-1} + dt_t * x_t (outer) B_t ;  y_t = C_t . h_t
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                      # (b,h,p),(b,h),(b,n),(b,n)
+        da = jnp.exp(A[None, :] * dtt)             # (b,h)
+        state = da[..., None, None] * state + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtt, bt, xt)
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)   # (B,S,H,P)

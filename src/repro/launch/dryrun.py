@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --------------------------------------------------------------------- #
+# Multi-pod dry-run (deliverable e): for every (architecture x input
+# shape x mesh), ``jit(step).lower(**ShapeDtypeStructs).compile()`` must
+# succeed on the production meshes — 16x16 (one pod, 256 chips) and
+# 2x16x16 (two pods, 512 chips). The 512 placeholder host devices are
+# forced by the XLA_FLAGS line above, set before ANY other import.
+#
+# Outputs: memory_analysis (fits?), cost_analysis (FLOPs/bytes for
+# §Roofline), collective bytes parsed from the optimized HLO, written as
+# one JSON artifact per combination under artifacts/dryrun/.
+# --------------------------------------------------------------------- #
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.shapes import (INPUT_SHAPES, InputShape, input_specs,
+                                  shape_applicable, variant_for_shape)
+from repro.launch import specs as S
+from repro.launch.hlo_flops import hlo_flops_bytes
+from repro.launch.hlo_stats import collective_stats, count_op
+from repro.launch.mesh import (HBM_BW, HBM_CAPACITY, ICI_BW,
+                               PEAK_FLOPS_BF16, make_production_mesh)
+from repro.models import decode_step, forward
+from repro.sharding.hooks import activation_rules
+from repro.sharding.rules import ShardingRules, make_rules
+from repro.train import TrainConfig, adamw_update, make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "..", "..", "..", "artifacts", "dryrun")
+
+
+MOE_DISPATCH = "einsum"     # overridden by --moe-dispatch (§Perf C2)
+
+
+def _arch_for(arch: str, shape: InputShape):
+    cfg = get_config(arch)
+    cfg = variant_for_shape(cfg, shape)
+    if cfg.moe_experts and cfg.moe_experts % 16 != 0:
+        # pad experts to the 16-way EP axis (granite 40 -> 48; DESIGN.md §6)
+        cfg = dataclasses.replace(
+            cfg, moe_pad_to=((cfg.moe_experts + 15) // 16) * 16)
+    if cfg.moe_experts and MOE_DISPATCH != "einsum":
+        cfg = dataclasses.replace(cfg, moe_dispatch=MOE_DISPATCH)
+    return cfg
+
+
+def build(arch: str, shape_name: str, mesh, *,
+          accum_steps: Optional[int] = None,
+          seq_shard_override: Optional[bool] = None,
+          optimized: bool = False):
+    """Returns (fn, kwargs_sds, in_shardings dict, out_shardings)."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = _arch_for(arch, shape)
+    seq_shard = (shape.name == "long_500k"
+                 if seq_shard_override is None else seq_shard_override)
+    rules = make_rules(mesh, seq_shard_cache=seq_shard)
+    sds = input_specs(cfg, shape)
+    p_shape = S.params_shape(cfg)
+    p_shard = S.param_shardings(rules, p_shape)
+
+    if shape.kind == "train":
+        accum = accum_steps or S.TRAIN_ACCUM_STEPS.get(arch, 1)
+        o_shape = S.opt_shape(cfg, p_shape)
+        o_shard = S.opt_shardings(rules, o_shape, p_shape)
+        tc = TrainConfig(accum_steps=accum,
+                         reshard_grads=optimized,
+                         grad_reduce_dtype="bfloat16" if optimized
+                         else None)
+        step = make_train_step(cfg, tc)
+        args = (p_shape, o_shape, sds)
+        in_sh = (p_shard, o_shard, S.batch_shardings(rules, sds))
+        out_sh = (p_shard, o_shard, None)
+        fn = step
+    elif shape.kind == "prefill":
+        def fn(params, batch):
+            logits, _ = forward(cfg, params, batch, remat=False)
+            return logits
+        args = (p_shape, sds)
+        in_sh = (p_shard, S.batch_shardings(rules, sds))
+        out_sh = None
+    else:  # decode
+        cache_sds = sds["cache"]
+        tok_sds = sds["tokens"]
+
+        def fn(params, cache, tokens):
+            return decode_step(cfg, params, cache, tokens)
+        args = (p_shape, cache_sds, tok_sds)
+        c_shard = S.cache_shardings(rules, cache_sds, seq_shard=seq_shard)
+        t_shard = NamedSharding(
+            mesh, P(rules.batch, None) if shape.global_batch > 1 else P())
+        in_sh = (p_shard, c_shard, t_shard)
+        out_sh = (None, c_shard)
+    return cfg, rules, fn, args, in_sh, out_sh
+
+
+def lower_and_compile(arch: str, shape_name: str, *, multi_pod: bool,
+                      accum_steps: Optional[int] = None,
+                      keep_hlo: bool = False,
+                      optimized: bool = False) -> Dict[str, Any]:
+    shape = INPUT_SHAPES[shape_name]
+    skip = shape_applicable(get_config(arch), shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": skip}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg, rules, fn, args, in_sh, out_sh = build(
+        arch, shape_name, mesh, accum_steps=accum_steps,
+        optimized=optimized)
+    t0 = time.time()
+    with activation_rules(rules.activation_table(), mesh, rules=rules):
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_stats = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception:   # CPU backend may not implement it
+        mem_stats = {}
+    hlo = compiled.as_text()
+    # trip-count-aware FLOPs/bytes/collectives (XLA cost_analysis counts
+    # while bodies once — orders of magnitude off under scan; see
+    # hlo_flops.py); collectives use the max(out, operand) wire proxy.
+    fb = hlo_flops_bytes(hlo)
+    coll = fb["collectives"]
+
+    n_dev = mesh.devices.size
+    flops = float(fb["flops"])
+    bytes_accessed = float(fb["bytes"])
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "n_devices": n_dev,
+        "accum_steps": (accum_steps or S.TRAIN_ACCUM_STEPS.get(arch, 1)
+                        if shape.kind == "train" else None),
+        "seconds_lower": round(t_lower, 2),
+        "seconds_compile": round(t_compile, 2),
+        # per-device numbers for the partitioned module (trip-count aware)
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        # XLA's own (while-bodies-once) numbers kept for comparison
+        "xla_cost_flops_per_device": float(cost.get("flops", 0.0)),
+        "xla_cost_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": coll,
+        "memory_analysis": mem_stats,
+        "hlo_instructions": hlo.count("\n"),
+        "n_allgather": count_op(hlo, "all-gather"),
+        "n_allreduce": count_op(hlo, "all-reduce"),
+        "n_reducescatter": count_op(hlo, "reduce-scatter"),
+        "n_alltoall": count_op(hlo, "all-to-all"),
+        "n_collectivepermute": count_op(hlo, "collective-permute"),
+    }
+    # roofline terms (single-pod reporting; §Roofline)
+    rec["roofline"] = {
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": bytes_accessed / HBM_BW,
+        "collective_s": coll.get("total", 0.0) / ICI_BW,
+    }
+    rec["roofline"]["dominant"] = max(
+        ("compute_s", "memory_s", "collective_s"),
+        key=lambda k: rec["roofline"][k])
+    if keep_hlo:
+        rec["hlo_path"] = _save_hlo(arch, shape_name, multi_pod, hlo)
+    return rec
+
+
+def _save_hlo(arch, shape_name, multi_pod, hlo) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    p = os.path.join(ARTIFACT_DIR,
+                     f"{arch}_{shape_name}_"
+                     f"{'2x16x16' if multi_pod else '16x16'}.hlo.txt")
+    with open(p, "w") as f:
+        f.write(hlo)
+    return p
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCH_NAMES} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {tuple(INPUT_SHAPES)} or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--accum-steps", type=int, default=None)
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--moe-dispatch", default="einsum",
+                    choices=("einsum", "scatter"))
+    ap.add_argument("--optimized", action="store_true",
+                    help="beyond-paper variant: grad reduce-scatter + "
+                         "bf16 grad reduction (see EXPERIMENTS.md §Perf)")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args()
+
+    global MOE_DISPATCH
+    MOE_DISPATCH = args.moe_dispatch
+    archs = list(ARCH_NAMES) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    records = []
+    failed = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = lower_and_compile(
+                        arch, shape, multi_pod=mp,
+                        accum_steps=args.accum_steps,
+                        keep_hlo=args.keep_hlo,
+                        optimized=args.optimized)
+                    records.append(rec)
+                    if rec["status"] == "ok":
+                        r = rec["roofline"]
+                        print(f"[ok] {tag}: compile={rec['seconds_compile']}s"
+                              f" flops/dev={rec['hlo_flops_per_device']:.3e}"
+                              f" coll/dev={rec['collective_bytes_per_device']['total']:.3e}B"
+                              f" dominant={r['dominant']}", flush=True)
+                    else:
+                        print(f"[skip] {tag}: {rec['reason']}", flush=True)
+                except Exception as e:
+                    failed += 1
+                    traceback.print_exc()
+                    records.append({"arch": arch, "shape": shape,
+                                    "mesh": "2x16x16" if mp else "16x16",
+                                    "status": "error", "error": str(e)[:2000]})
+                    print(f"[FAIL] {tag}: {e}", flush=True)
+
+    out = args.out
+    if out is None:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        out = os.path.join(ARTIFACT_DIR, "dryrun.json")
+    existing = []
+    if os.path.exists(out):
+        with open(out) as f:
+            existing = json.load(f)
+    key = lambda r: (r["arch"], r["shape"], r["mesh"])
+    merged = {key(r): r for r in existing}
+    for r in records:
+        merged[key(r)] = r
+    with open(out, "w") as f:
+        json.dump(list(merged.values()), f, indent=1)
+    print(f"wrote {out} ({len(records)} new records, {failed} failures)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,162 @@
+"""Post-SPMD HLO text analysis: collective bytes per device.
+
+``compiled.cost_analysis()`` has no collective traffic term, so we parse
+the optimized HLO (``compiled.as_text()``): every ``all-gather`` /
+``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` instruction contributes its OUTPUT shape bytes
+(per-device, since post-SPMD shapes are per-device).
+
+Collectives inside ``while`` bodies (scan-over-layers, gradient
+accumulation) execute once per trip; we recover trip counts from the loop
+condition's ``compare(counter, constant)`` and multiply, recursing through
+nested loops, calls and fusions.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every array shape in a (possibly tuple) shape str."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines.
+
+    A computation header is any line ending in '{' that contains '->'
+    (robust to nested tuple-typed parameter lists, which defeat
+    paren-matching regexes)."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped \
+                and "= " not in stripped.split("->")[0]:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if stripped == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _instr_output_shape(line: str) -> str:
+    """The shape between '=' and the op name."""
+    try:
+        rhs = line.split("= ", 1)[1]
+    except IndexError:
+        return ""
+    return rhs
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Loop trip count from the condition computation (counter < C)."""
+    consts = []
+    for ln in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def collective_stats(hlo: str) -> Dict[str, float]:
+    """Per-device collective bytes by type + total, trip-count aware."""
+    comps = _split_computations(hlo)
+    cond_of: Dict[str, str] = {}
+    body_trip: Dict[str, int] = {}
+
+    # map while bodies to their condition trip counts
+    for name, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln:
+                b = re.search(r"body=%?([\w\.\-]+)", ln)
+                c = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if b and c and c.group(1) in comps:
+                    body_trip[b.group(1)] = _trip_count(comps[c.group(1)])
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def bytes_of(comp: str, stack=()) -> Dict[str, float]:
+        if comp in memo:
+            return memo[comp]
+        if comp in stack or comp not in comps:
+            return {}
+        acc: Dict[str, float] = defaultdict(float)
+        for ln in comps[comp]:
+            rhs = _instr_output_shape(ln)
+            op = None
+            for cop in COLLECTIVES:
+                if re.search(rf"\b{cop}(-start|-done)?\(", rhs):
+                    op = cop
+                    break
+            if op and "-done(" not in rhs:
+                acc[op] += _shape_bytes(rhs.split("(")[0])
+            # recurse into referenced computations
+            for ref_kind, mult_by_trip in (
+                    ("body", True), ("to_apply", False), ("calls", False)):
+                m = re.search(rf"{ref_kind}=%?([\w\.\-]+)", rhs)
+                if m:
+                    sub = bytes_of(m.group(1), stack + (comp,))
+                    mult = body_trip.get(m.group(1), 1) if mult_by_trip else 1
+                    for k, v in sub.items():
+                        acc[k] += v * mult
+            for m in re.finditer(r"(?:true_computation|false_computation|"
+                                 r"branch_computations)=\{?%?([\w\.\-, %]+)",
+                                 rhs):
+                for sub_name in re.split(r"[,\s%]+", m.group(1)):
+                    if sub_name:
+                        sub = bytes_of(sub_name, stack + (comp,))
+                        for k, v in sub.items():
+                            acc[k] += v
+        memo[comp] = dict(acc)
+        return memo[comp]
+
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+    if m:
+        entry = m.group(1)
+    if entry is None or entry not in comps:
+        # fall back: sum everything flat (no trip counts)
+        acc: Dict[str, float] = defaultdict(float)
+        for lines in comps.values():
+            for ln in lines:
+                for cop in COLLECTIVES:
+                    if re.search(rf"\b{cop}(-start)?\(", ln):
+                        acc[cop] += _shape_bytes(ln.split("(")[0])
+        out = dict(acc)
+    else:
+        out = bytes_of(entry)
+    out = {k: float(v) for k, v in out.items()}
+    out["total"] = float(sum(v for k, v in out.items() if k != "total"))
+    return out
+
+
+def count_op(hlo: str, opname: str) -> int:
+    return len(re.findall(rf"\b{opname}\(", hlo))

@@ -1,0 +1,52 @@
+"""Re-derive FLOPs/bytes/collective stats for existing dry-run records
+from their kept HLO files (no recompilation) — used when the HLO
+analyzers improve. Updates artifacts/dryrun/dryrun.json in place."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.launch.hlo_flops import hlo_flops_bytes
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "artifacts", "dryrun")
+
+
+def main() -> int:
+    path = os.path.join(ART, "dryrun.json")
+    with open(path) as f:
+        records = json.load(f)
+    n = 0
+    for rec in records:
+        if rec.get("status") != "ok":
+            continue
+        hlo_path = os.path.join(
+            ART, f"{rec['arch']}_{rec['shape']}_{rec['mesh']}.hlo.txt")
+        if not os.path.exists(hlo_path):
+            print(f"missing HLO for {rec['arch']} {rec['shape']} "
+                  f"{rec['mesh']}; skipped", file=sys.stderr)
+            continue
+        with open(hlo_path) as f:
+            fb = hlo_flops_bytes(f.read())
+        rec["hlo_flops_per_device"] = float(fb["flops"])
+        rec["hlo_bytes_per_device"] = float(fb["bytes"])
+        rec["collective_bytes_per_device"] = fb["collectives"]
+        rec["roofline"] = {
+            "compute_s": fb["flops"] / PEAK_FLOPS_BF16,
+            "memory_s": fb["bytes"] / HBM_BW,
+            "collective_s": fb["collectives"].get("total", 0.0) / ICI_BW,
+        }
+        rec["roofline"]["dominant"] = max(
+            ("compute_s", "memory_s", "collective_s"),
+            key=lambda k: rec["roofline"][k])
+        n += 1
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"re-analyzed {n} records")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

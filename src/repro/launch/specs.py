@@ -1,0 +1,137 @@
+"""Sharding specs for every dry-run input: params, optimizer state, data
+batch and decode cache. Kept separate from ``dryrun.py`` so the train /
+serve drivers and tests reuse them (this module never forces the 512
+placeholder devices)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import InputShape, input_specs, variant_for_shape
+from repro.models import init_cache, init_params
+from repro.sharding.rules import ShardingRules, param_specs
+from repro.train.optimizer import adamw_init
+
+# archs whose optimizer moments are kept in bf16 (fit 16 GiB/chip)
+BF16_MOMENTS_ABOVE = 50e9
+
+# gradient-accumulation sub-steps for the train_4k dry-run (the paper's
+# memory mechanism; tuned so activations fit per chip — EXPERIMENTS.md)
+TRAIN_ACCUM_STEPS: Dict[str, int] = {
+    "llama3-405b": 16,
+    "llama4-maverick-400b-a17b": 8,
+    "zamba2-7b": 2,
+    "glm4-9b": 2,
+    "stablelm-12b": 2,
+}
+
+
+def params_shape(cfg: ArchConfig) -> Any:
+    """ShapeDtypeStruct pytree of the model parameters (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_shape(cfg: ArchConfig, p_shape) -> Any:
+    n_params = sum(x.size for x in jax.tree.leaves(p_shape))
+    mdt = jnp.bfloat16 if n_params * 2 > BF16_MOMENTS_ABOVE else jnp.float32
+    return jax.eval_shape(lambda: adamw_init(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), p_shape),
+        moment_dtype=mdt))
+
+
+# ---------------------------------------------------------------------- #
+def batch_spec(rules: ShardingRules, name: str, ndim: int) -> P:
+    b = rules.batch
+    if ndim == 0:
+        return P()
+    return P(b, *([None] * (ndim - 1)))
+
+
+def cache_spec(rules: ShardingRules, path: str, ndim: int,
+               *, seq_shard: bool) -> P:
+    """Decode-cache leaf specs. Leaves are stacked over units (leading U).
+    ``seq_shard``: long_500k mode — batch=1, shard the KV sequence dim."""
+    b, tp = rules.batch, rules.tp
+    leaf = path.rsplit("/", 1)[-1]
+    if ndim <= 1:
+        return P(*([None] * ndim))
+    if leaf in ("k", "v"):                      # (U, B, S, H, D)
+        if seq_shard:
+            axes = ("data", tp) if "data" in rules.mesh.axis_names else (tp,)
+            return P(None, None, axes, *([None] * (ndim - 3)))
+        # batch over the data axes AND KV heads over 'model' (§Perf B:
+        # an unsharded-head cache was all-gathered in f32 inside every
+        # unit of the decode scan — 71 GB/token on zamba2). Archs whose
+        # kv-head count does not divide the TP axis fall back to
+        # replicated heads via sanitize_spec.
+        return P(None, b, None, tp, *([None] * (ndim - 4)))
+    if leaf in ("state", "C"):                  # (U, B, H, P, N)
+        if seq_shard:
+            return P(None, None, tp, *([None] * (ndim - 3)))
+        return P(None, b, tp, *([None] * (ndim - 3)))
+    if leaf == "conv":                          # (U, B, k-1, ch)
+        if seq_shard:
+            return P(*([None] * (ndim - 1)), tp)
+        return P(None, b, *([None] * (ndim - 2)))
+    if leaf in ("n", "m", "h", "c"):            # mLSTM/sLSTM vectors
+        if seq_shard:
+            return P(None, None, tp, *([None] * (ndim - 3))) if ndim >= 3 \
+                else P(*([None] * ndim))
+        return P(None, b, *([None] * (ndim - 2)))
+    return P(*([None] * ndim))
+
+
+# re-exported: canonical implementation lives in repro.sharding.rules
+from repro.sharding.rules import sanitize_spec  # noqa: E402
+
+
+def _sanitized_sharding(mesh, leaf, spec) -> NamedSharding:
+    return NamedSharding(mesh, sanitize_spec(mesh, leaf.shape, spec))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        else:
+            parts.append(str(getattr(p, "idx", p)))
+    return "/".join(parts)
+
+
+def cache_shardings(rules: ShardingRules, cache_shape,
+                    *, seq_shard: bool):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _sanitized_sharding(
+            rules.mesh, leaf,
+            cache_spec(rules, _path_str(path), len(leaf.shape),
+                       seq_shard=seq_shard)),
+        cache_shape)
+
+
+def batch_shardings(rules: ShardingRules, batch_shape):
+    return jax.tree.map(
+        lambda leaf: _sanitized_sharding(
+            rules.mesh, leaf, batch_spec(rules, "", len(leaf.shape))),
+        batch_shape)
+
+
+def param_shardings(rules: ShardingRules, p_shape):
+    specs = param_specs(rules, p_shape)
+    return jax.tree.map(
+        lambda leaf, spec: _sanitized_sharding(rules.mesh, leaf, spec),
+        p_shape, specs,
+        is_leaf=lambda x: isinstance(x, (P, jax.ShapeDtypeStruct)))
+
+
+def opt_shardings(rules: ShardingRules, o_shape, p_shape):
+    pspec = param_shardings(rules, p_shape)
+    return type(o_shape)(
+        step=NamedSharding(rules.mesh, P()),
+        m=pspec, v=pspec)

@@ -1,0 +1,150 @@
+"""Shared neural-net layers: norms, linears, embeddings, RoPE/M-RoPE,
+sinusoidal positions, SwiGLU MLP. Pure-JAX pytree parameters."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normal_init(key, shape, std=0.02, dtype=jnp.float32):
+    return (std * jax.random.normal(key, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------- #
+# norm
+# ---------------------------------------------------------------------- #
+def rms_norm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------- #
+# linear / embedding
+# ---------------------------------------------------------------------- #
+def linear_init(key, d_in, d_out, bias=False, std=0.02, dtype=jnp.float32):
+    p = {"w": normal_init(key, (d_in, d_out), std, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return {"table": normal_init(key, (vocab, d), 0.02, dtype)}
+
+
+def embed(p, tokens, dtype):
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p, x):
+    # tied head: logits = x @ table.T
+    return x @ p["table"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------- #
+# positions
+# ---------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def rope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (..., S) int -> cos/sin (..., S, head_dim//2)."""
+    ang = positions[..., None].astype(jnp.float32) * rope_freqs(head_dim, theta)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x: (B, S, H, D); cos/sin: (B, S, D//2) or (S, D//2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def mrope_cos_sin(positions3: jnp.ndarray, head_dim: int, theta: float,
+                  sections: Tuple[int, ...]
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Qwen2-VL M-RoPE. positions3: (3, B, S) — temporal/height/width
+    position streams; ``sections`` split head_dim//2 rotary channels among
+    the three streams. Returns (B, S, head_dim//2) cos/sin."""
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    freqs = rope_freqs(head_dim, theta)          # (head_dim//2,)
+    ang_all = positions3[..., None].astype(jnp.float32) * freqs  # (3,B,S,D/2)
+    chunks = []
+    start = 0
+    for i, sec in enumerate(sections):
+        chunks.append(ang_all[i, :, :, start:start + sec])
+        start += sec
+    ang = jnp.concatenate(chunks, axis=-1)       # (B, S, D/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def sinusoidal_positions(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    """(B, S) or (S,) int positions -> (..., d_model) sinusoidal embeddings
+    (whisper-style, length-extensible)."""
+    half = d_model // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------- #
+# MLP
+# ---------------------------------------------------------------------- #
+def swiglu_init(key, d, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": linear_init(k1, d, d_ff, dtype=dtype),
+        "up": linear_init(k2, d, d_ff, dtype=dtype),
+        "down": linear_init(k3, d_ff, d, dtype=dtype),
+    }
+
+
+def swiglu(p, x):
+    from repro.sharding.hooks import constrain
+    h = jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x)
+    h = constrain(h, "act_ffn")
+    return linear(p["down"], h)
+
+
+def gelu_mlp_init(key, d, d_ff, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"up": linear_init(k1, d, d_ff, bias=True, dtype=dtype),
+            "down": linear_init(k2, d_ff, d, bias=True, dtype=dtype)}
+
+
+def gelu_mlp(p, x):
+    from repro.sharding.hooks import constrain
+    h = jax.nn.gelu(linear(p["up"], x))
+    h = constrain(h, "act_ffn")
+    return linear(p["down"], h)

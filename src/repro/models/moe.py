@@ -1,0 +1,196 @@
+"""Mixture-of-Experts FFN: top-k routing, grouped capacity-based dispatch
+(GShard/MaxText lineage), optional shared expert (Llama-4 style) and
+expert padding to a multiple of the expert-parallel axis (granite on a
+16-way TP axis pads 40 -> 48 with -inf router logits; DESIGN.md §6).
+
+Two dispatch modes:
+  * ``einsum``  — one-hot dispatch/combine einsums over per-group capacity
+                  slots. Partitions well under GSPMD (tokens over batch,
+                  experts over 'model'); the dispatch einsums are gathers
+                  in disguise and inflate HLO FLOP counts (~2*B*S*E*C*d) —
+                  quantified in EXPERIMENTS.md §Roofline.
+  * ``dense``   — every expert on every token, exact weighted sum; O(E)
+                  compute, used only by tests as the routing oracle.
+
+Tokens are processed in groups of ``group_size`` along the sequence;
+capacity C = ceil(cf * g * k / E) per group bounds the dispatch tensors to
+O(B*S*E*C) = O(cf * B*S*g*k) elements instead of the ungrouped O(B*S^2*k).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.hooks import constrain
+
+from .layers import linear, linear_init, normal_init, swiglu, swiglu_init
+
+GROUP_SIZE = 256
+CAPACITY_FACTOR = 1.25
+
+
+# ---------------------------------------------------------------------- #
+def moe_init(key, d_model, n_experts, d_ff, *, shared_expert=False,
+             pad_to: int = 0, dtype=jnp.float32):
+    """``pad_to``: pad the expert dimension to this count (router logits of
+    pads are masked to -inf); 0 = no padding."""
+    e_pad = max(n_experts, pad_to)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": {"w": normal_init(k1, (d_model, e_pad))},
+        "experts": {
+            "gate": normal_init(k2, (e_pad, d_model, d_ff)),
+            "up": normal_init(k3, (e_pad, d_model, d_ff)),
+            "down": normal_init(k4, (e_pad, d_ff, d_model)),
+        },
+    }
+    if dtype != jnp.float32:
+        p = jax.tree.map(lambda t: t.astype(dtype), p)
+    if shared_expert:
+        p["shared"] = swiglu_init(k5, d_model, d_ff, dtype=dtype)
+    return p
+
+
+# ---------------------------------------------------------------------- #
+def _top_k_positions(mask_e, top_idx, n_experts_padded, capacity):
+    """Assign capacity slots. mask_e: (G, g, k, E) one-hot; returns
+    (position (G,g,k), keep (G,g,k)) respecting k-priority order."""
+    G, g, k, E = mask_e.shape
+    positions = []
+    keeps = []
+    offset = jnp.zeros((G, 1, E), jnp.int32)
+    for slot in range(k):
+        m = mask_e[:, :, slot, :]                       # (G, g, E)
+        pos_in_e = jnp.cumsum(m, axis=1) - m + offset   # (G, g, E)
+        pos = (pos_in_e * m).sum(-1)                    # (G, g)
+        keep = pos < capacity
+        positions.append(pos.astype(jnp.int32))
+        keeps.append(keep)
+        offset = offset + jnp.sum(m, axis=1, keepdims=True).astype(jnp.int32)
+    return jnp.stack(positions, -1), jnp.stack(keeps, -1)
+
+
+def moe_forward(p, x, *, n_experts: int, top_k: int,
+                group_size: int = GROUP_SIZE,
+                capacity_factor: float = CAPACITY_FACTOR,
+                dispatch: str = "einsum") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y (B, S, D), aux load-balance loss scalar)."""
+    b, s, d = x.shape
+    e_pad = p["router"]["w"].shape[-1]
+    logits = linear(p["router"], x.astype(jnp.float32))     # (B,S,E_pad)
+    if e_pad > n_experts:
+        pad_mask = jnp.arange(e_pad) >= n_experts
+        logits = jnp.where(pad_mask[None, None], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = constrain(probs, "router")
+
+    # load-balance aux (Switch): E * sum_e f_e * P_e
+    top1 = jnp.argmax(probs, axis=-1)
+    f_e = jnp.mean(jax.nn.one_hot(top1, e_pad, dtype=jnp.float32),
+                   axis=(0, 1))
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = n_experts * jnp.sum(f_e * p_e)
+
+    if dispatch == "dense":
+        y = _dense_moe(p, x, probs, n_experts, top_k)
+        return y + _shared(p, x), aux
+
+    gate_vals, top_idx = jax.lax.top_k(probs, top_k)        # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    g = min(group_size, s)
+    assert s % g == 0, (s, g)
+    G = b * (s // g)
+    cap = max(1, math.ceil(capacity_factor * g * top_k / n_experts))
+    xg = x.reshape(G, g, d)
+    idxg = top_idx.reshape(G, g, top_k)
+    gateg = gate_vals.reshape(G, g, top_k)
+    onehot = jax.nn.one_hot(idxg, e_pad, dtype=jnp.int32)   # (G,g,k,E)
+    pos, keep = _top_k_positions(onehot, idxg, e_pad, cap)  # (G,g,k)
+
+    if dispatch == "scatter":
+        # §Perf C2: index-based dispatch/combine — no one-hot einsums
+        # (which cost ~2*cf*B*S*k*d FLOPs each way); scatter/gather move
+        # only the dispatched tokens.
+        y = _scatter_moe(p, x, xg, idxg, pos, keep, gateg, cap, e_pad)
+        return y + _shared(p, x), aux
+    # dispatch tensor (G, g, E, C)
+    slot_oh = jax.nn.one_hot(pos, cap, dtype=x.dtype) \
+        * keep[..., None].astype(x.dtype)                   # (G,g,k,C)
+    disp = jnp.einsum("tgke,tgkc->tgec",
+                      onehot.astype(x.dtype), slot_oh)      # (G,g,E,C)
+    comb = jnp.einsum("tgk,tgke,tgkc->tgec",
+                      gateg.astype(jnp.float32),
+                      onehot.astype(jnp.float32),
+                      slot_oh.astype(jnp.float32))          # (G,g,E,C)
+
+    xe = jnp.einsum("tgec,tgd->tecd", disp, x.reshape(G, g, d))
+    xe = constrain(xe, "moe_dispatch")
+    w = p["experts"]
+    h = jax.nn.silu(jnp.einsum("tecd,edf->tecf", xe,
+                               w["gate"].astype(x.dtype))) \
+        * jnp.einsum("tecd,edf->tecf", xe, w["up"].astype(x.dtype))
+    ye = jnp.einsum("tecf,efd->tecd", h, w["down"].astype(x.dtype))
+    ye = constrain(ye, "moe_dispatch")
+    # combine in the model dtype (§Perf C: the EP partial-sum all-reduce
+    # over 'model' rides on this einsum's output — bf16 halves its bytes)
+    y = jnp.einsum("tgec,tecd->tgd", comb.astype(x.dtype), ye)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    return y + _shared(p, x), aux
+
+
+def _scatter_moe(p, x, xg, idxg, pos, keep, gateg, cap, e_pad):
+    """Scatter/gather dispatch: xe[G, e, c] += x[G, t] at (e, c) =
+    (expert, slot) of each kept assignment; combine gathers back."""
+    G, g, d = xg.shape
+    top_k = idxg.shape[-1]
+    gi = jnp.arange(G)[:, None, None]                   # (G,1,1)
+    upd = xg[:, :, None, :] * keep[..., None].astype(xg.dtype)  # (G,g,k,d)
+    xe = jnp.zeros((G, e_pad, cap, d), xg.dtype)
+    # clip dropped slots to 0 — their update rows are zeroed anyway
+    pos_c = jnp.minimum(pos, cap - 1)
+    xe = xe.at[gi, idxg, pos_c].add(upd)
+    from repro.sharding.hooks import constrain
+    xe = constrain(xe, "moe_dispatch")
+    w = p["experts"]
+    h = jax.nn.silu(jnp.einsum("tecd,edf->tecf", xe,
+                               w["gate"].astype(xg.dtype))) \
+        * jnp.einsum("tecd,edf->tecf", xe, w["up"].astype(xg.dtype))
+    ye = jnp.einsum("tecf,efd->tecd", h, w["down"].astype(xg.dtype))
+    ye = constrain(ye, "moe_dispatch")
+    picked = ye[gi, idxg, pos_c]                        # (G,g,k,d)
+    wk = (gateg * keep.astype(gateg.dtype)).astype(xg.dtype)
+    y = jnp.einsum("tgk,tgkd->tgd", wk, picked)
+    b, s, _ = x.shape
+    return y.reshape(b, s, d).astype(x.dtype)
+
+
+def _shared(p, x):
+    if "shared" not in p:
+        return jnp.zeros((), x.dtype)
+    return swiglu(p["shared"], x)
+
+
+def _dense_moe(p, x, probs, n_experts, top_k):
+    """Exact O(E) oracle: run every expert, weighted-sum the top-k."""
+    gate_vals, top_idx = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    e_pad = p["router"]["w"].shape[-1]
+    w = p["experts"]
+
+    def one_expert(gw, uw, dw):
+        h = jax.nn.silu(x @ gw.astype(x.dtype)) * (x @ uw.astype(x.dtype))
+        return h @ dw.astype(x.dtype)
+
+    ys = jax.vmap(one_expert)(w["gate"], w["up"], w["down"])  # (E,B,S,D)
+    weights = jnp.zeros(probs.shape, jnp.float32)
+    for k in range(top_k):
+        weights += gate_vals[..., k:k + 1] * jax.nn.one_hot(
+            top_idx[..., k], e_pad, dtype=jnp.float32)
+    y = jnp.einsum("ebsd,bse->bsd", ys.astype(jnp.float32), weights)
+    return y.astype(x.dtype)

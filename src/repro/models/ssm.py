@@ -1,0 +1,203 @@
+"""Mamba2 (SSD) block — chunkwise-parallel training form + O(1) decode.
+
+Training uses the chunked state-space-dual recurrence: a ``lax.scan`` over
+sequence chunks carrying the inter-chunk state (B, H, P, N); within a
+chunk the computation is the attention-like masked form. This is exactly
+the structure of the Pallas kernel in ``repro.kernels/mamba2_scan`` (grid
+over (B, H), sequential chunk loop); the jnp path here doubles as its
+reference and as the CPU/lowering-friendly implementation.
+
+All decay factors are exp of non-positive numbers (A < 0, dt > 0), so the
+chunked form is numerically stable without extra rescaling.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.hooks import constrain
+
+from .layers import linear, linear_init, rms_norm, rms_norm_init
+
+CHUNK = 256
+
+
+# ---------------------------------------------------------------------- #
+# params
+# ---------------------------------------------------------------------- #
+def mamba2_init(key, d_model, d_inner, ssm_state, n_heads, d_conv=4,
+                dtype=jnp.float32):
+    assert d_inner % n_heads == 0, (d_inner, n_heads)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    n, h = ssm_state, n_heads
+    d_in_proj = 2 * d_inner + 2 * n + h          # z, x, B, C, dt
+    conv_ch = d_inner + 2 * n                    # x, B, C get convolved
+    dt = jnp.exp(jax.random.uniform(k3, (h,),
+                                    minval=jnp.log(1e-3),
+                                    maxval=jnp.log(1e-1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))      # inverse softplus
+    return {
+        "in_proj": linear_init(k1, d_model, d_in_proj, dtype=dtype),
+        "conv_w": (jax.random.normal(k2, (d_conv, conv_ch)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": rms_norm_init(d_inner, dtype),
+        "out_proj": linear_init(k4, d_inner, d_model, dtype=dtype),
+    }
+
+
+def _split_proj(proj, d_inner, n, h):
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + d_inner + 2 * n]
+    dt = proj[..., d_inner + d_inner + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, xbc: (B, S, C), w: (k, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+              for i in range(k))
+    return jax.nn.silu(out + b.astype(xbc.dtype))
+
+
+# ---------------------------------------------------------------------- #
+# chunked SSD forward
+# ---------------------------------------------------------------------- #
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk=CHUNK,
+                init_state: Optional[jnp.ndarray] = None,
+                return_state: bool = False):
+    """x: (B,S,H,P) f32, dt: (B,S,H) f32 (>0), A: (H,) f32 (<0),
+    Bm/Cm: (B,S,N) f32. Returns y (B,S,H,P) [, final state (B,H,P,N)]."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    if s % chunk != 0:
+        chunk = s  # degenerate small-sequence case
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, n)
+    Cc = Cm.reshape(b, nc, chunk, n)
+    dA = A[None, None, None, :] * dtc            # (b,nc,L,h)  (<= 0)
+
+    def step(state, inputs):
+        xi, dti, Bi, Ci, dAi = inputs            # (b,L,h,p) ...
+        cum = jnp.cumsum(dAi, axis=1)            # (b,L,h)
+        total = cum[:, -1]                       # (b,h)
+        # intra-chunk (attention-like) term; mask the exponent BEFORE exp
+        # (i<j entries are exp of a positive number -> overflow otherwise)
+        scores = jnp.einsum("bin,bjn->bij", Ci, Bi)          # (b,L,L)
+        causal = jnp.tril(jnp.ones((xi.shape[1], xi.shape[1]), bool))
+        diff = cum[:, :, None] - cum[:, None, :]             # (b,i,j,h)
+        decay = jnp.exp(jnp.where(causal[None, :, :, None], diff, -jnp.inf))
+        m = scores[..., None] * decay                        # (b,i,j,h)
+        xdt = xi * dti[..., None]                             # (b,L,h,p)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m, xdt)
+        # inter-chunk term
+        y_inter = jnp.einsum("bin,bhpn->bihp", Ci, state) \
+            * jnp.exp(cum)[..., None]                         # (b,L,h,p)
+        # state update
+        w = jnp.exp(total[:, None, :] - cum) * dti            # (b,L,h)
+        s_local = jnp.einsum("blh,bln,blhp->bhpn", w, Bi, xi)
+        state = jnp.exp(total)[..., None, None] * state + s_local
+        return state, y_intra + y_inter
+
+    state0 = (init_state if init_state is not None
+              else jnp.zeros((b, h, p, n), jnp.float32))
+    # scan over chunks: move nc to the front
+    xs = (xc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+          Bc.transpose(1, 0, 2, 3), Cc.transpose(1, 0, 2, 3),
+          dA.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, state0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    if return_state:
+        return y, final
+    return y
+
+
+# ---------------------------------------------------------------------- #
+# block forward (train / prefill)
+# ---------------------------------------------------------------------- #
+def mamba2_forward(p, x, *, d_inner, ssm_state, n_heads,
+                   use_kernel: bool = False,
+                   return_state: bool = False):
+    """x: (B, S, d_model) -> (B, S, d_model)."""
+    b, s, _ = x.shape
+    n, h = ssm_state, n_heads
+    pp = d_inner // h
+    proj = linear(p["in_proj"], x)
+    z, xbc, dt_raw = _split_proj(proj, d_inner, n, h)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xbc = constrain(xbc, "act_inner")
+    xs = xbc[..., :d_inner].astype(jnp.float32).reshape(b, s, h, pp)
+    Bm = xbc[..., d_inner:d_inner + n].astype(jnp.float32)
+    Cm = xbc[..., d_inner + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])          # (b,s,h)
+    A = -jnp.exp(p["A_log"])
+    if use_kernel:
+        from repro.kernels import mamba2_ops
+        y = mamba2_ops.ssd(xs, dt, A, Bm, Cm)
+        state = None
+    else:
+        out = ssd_chunked(xs, dt, A, Bm, Cm, return_state=return_state)
+        y, state = out if return_state else (out, None)
+    y = y + p["D"][None, None, :, None] * xs
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z))
+    out = linear(p["out_proj"], y)
+    if return_state:
+        return out, state
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# decode (single token, O(1) state)
+# ---------------------------------------------------------------------- #
+def mamba2_init_cache(batch, d_inner, ssm_state, n_heads, d_conv=4,
+                      dtype=jnp.float32):
+    conv_ch = d_inner + 2 * ssm_state
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, n_heads, d_inner // n_heads, ssm_state),
+                           jnp.float32),
+    }
+
+
+def mamba2_decode(p, x, cache, *, d_inner, ssm_state, n_heads):
+    """x: (B, 1, d_model) -> (y (B,1,d_model), new cache)."""
+    b = x.shape[0]
+    n, h = ssm_state, n_heads
+    pp = d_inner // h
+    proj = linear(p["in_proj"], x)[:, 0]          # (B, ...)
+    z, xbc, dt_raw = _split_proj(proj, d_inner, n, h)
+    # conv over [cache window, current]
+    win = jnp.concatenate([cache["conv"],
+                           xbc[:, None].astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                          w.astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    new_conv = win[:, 1:]
+    xs = xbc[..., :d_inner].reshape(b, h, pp)
+    Bm = xbc[..., d_inner:d_inner + n]
+    Cm = xbc[..., d_inner + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(A[None] * dt)                    # (B, H)
+    state = cache["state"]
+    state = dA[..., None, None] * state + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bm, xs)
+    state = constrain(state, "ssm_state")
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm)
+    y = y + p["D"][None, :, None] * xs
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z[:, None]))
+    out = linear(p["out_proj"], y)
+    return out, {"conv": new_conv, "state": state}

@@ -1,0 +1,224 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, chunkwise-
+parallel training form with log-space gate stabilization) and sLSTM
+(scalar memory, strictly recurrent ``lax.scan``). xLSTM[7:1] stacks 7
+mLSTM blocks per sLSTM block.
+
+The mLSTM chunkwise recurrence mirrors the Mamba2 SSD structure (scan
+over chunks carrying (C, n, m)); the stabilizer m keeps the exponential
+input gate bounded, exactly as in the paper's Appendix.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.hooks import constrain
+
+from .layers import linear, linear_init, rms_norm, rms_norm_init
+
+CHUNK = 256
+NEG = -1e30
+
+
+# ====================================================================== #
+# mLSTM
+# ====================================================================== #
+def mlstm_init(key, d_model, d_inner, n_heads, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    h = n_heads
+    # in_proj packs q, k, v, z (gate), i_raw, f_raw
+    return {
+        "in_proj": linear_init(k1, d_model, 4 * d_inner + 2 * h, dtype=dtype),
+        "norm": rms_norm_init(d_inner, dtype),
+        "out_proj": linear_init(k2, d_inner, d_model, dtype=dtype),
+    }
+
+
+def _mlstm_split(proj, di, h):
+    q = proj[..., 0 * di:1 * di]
+    k = proj[..., 1 * di:2 * di]
+    v = proj[..., 2 * di:3 * di]
+    z = proj[..., 3 * di:4 * di]
+    i_raw = proj[..., 4 * di:4 * di + h]
+    f_raw = proj[..., 4 * di + h:]
+    return q, k, v, z, i_raw, f_raw
+
+
+def mlstm_chunked(q, k, v, i_log, f_log, *, chunk=CHUNK,
+                  init_state=None, return_state=False):
+    """q/k/v: (B,S,H,D) f32; i_log/f_log: (B,S,H) f32 (f_log <= 0).
+    Returns h (B,S,H,D) [, state (C, n, m)]."""
+    b, s, h, d = q.shape
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    shp = (b, nc, chunk, h)
+    qc = q.reshape(*shp, d).transpose(1, 0, 2, 3, 4) * d ** -0.5
+    kc = k.reshape(*shp, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(*shp, d).transpose(1, 0, 2, 3, 4)
+    ic = i_log.reshape(shp).transpose(1, 0, 2, 3)
+    fc = f_log.reshape(shp).transpose(1, 0, 2, 3)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, inp):
+        C, n, m = carry                    # (b,h,d,d), (b,h,d), (b,h)
+        qi, ki, vi, ii, fi = inp           # (b,L,h,*)
+        cum = jnp.cumsum(fi, axis=1)       # (b,L,h)
+        total = cum[:, -1]                 # (b,h)
+        # D[i,j] = cum_i - cum_j + i_log_j (i >= j)
+        Dm = cum[:, :, None, :] - cum[:, None, :, :] + ii[:, None, :, :]
+        Dm = jnp.where(causal[None, :, :, None], Dm, NEG)     # (b,i,j,h)
+        inter_log = cum + m[:, None, :]                       # (b,L,h)
+        m_t = jnp.maximum(Dm.max(axis=2), inter_log)          # (b,L,h)
+        scores = jnp.einsum("blhd,bjhd->bljh", qi, ki) \
+            * jnp.exp(Dm - m_t[:, :, None, :])                # (b,i,j,h)
+        h_num = jnp.einsum("bljh,bjhd->blhd", scores, vi)
+        h_num += jnp.einsum("blhd,bhde->blhe", qi, C) \
+            * jnp.exp(inter_log - m_t)[..., None]
+        n_t = jnp.einsum("bljh,bjhd->blhd", scores, ki)
+        n_t += n[:, None] * jnp.exp(inter_log - m_t)[..., None]
+        qn = jnp.einsum("blhd,blhd->blh", qi, n_t)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+        h_out = h_num / denom[..., None]
+        # end-of-chunk state
+        a = total[:, None, :] - cum + ii                      # (b,L,h)
+        m_next = jnp.maximum(total + m, a.max(axis=1))        # (b,h)
+        w = jnp.exp(a - m_next[:, None, :])                   # (b,L,h)
+        C_next = C * jnp.exp(total + m - m_next)[..., None, None] \
+            + jnp.einsum("blh,blhd,blhe->bhde", w, ki, vi)
+        n_next = n * jnp.exp(total + m - m_next)[..., None] \
+            + jnp.einsum("blh,blhd->bhd", w, ki)
+        return (C_next, n_next, m_next), h_out
+
+    if init_state is None:
+        C0 = jnp.zeros((b, h, d, d), jnp.float32)
+        n0 = jnp.zeros((b, h, d), jnp.float32)
+        m0 = jnp.zeros((b, h), jnp.float32)
+        init_state = (C0, n0, m0)
+    state, hs = jax.lax.scan(step, init_state, (qc, kc, vc, ic, fc))
+    out = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+    if return_state:
+        return out, state
+    return out
+
+
+def mlstm_forward(p, x, *, d_inner, n_heads):
+    b, s, _ = x.shape
+    h = n_heads
+    dh = d_inner // h
+    proj = linear(p["in_proj"], x)
+    q, k, v, z, i_raw, f_raw = _mlstm_split(proj, d_inner, h)
+    q = constrain(q, "act_inner")
+    f_log = -jax.nn.softplus(-f_raw.astype(jnp.float32))   # log sigmoid
+    i_log = i_raw.astype(jnp.float32)
+    rs = lambda t: t.astype(jnp.float32).reshape(b, s, h, dh)
+    y = mlstm_chunked(rs(q), rs(k), rs(v), i_log, f_log)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z))
+    return linear(p["out_proj"], y)
+
+
+def mlstm_init_cache(batch, d_inner, n_heads, dtype=jnp.float32):
+    dh = d_inner // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+        "m": jnp.zeros((batch, n_heads), jnp.float32),
+    }
+
+
+def mlstm_decode(p, x, cache, *, d_inner, n_heads):
+    b = x.shape[0]
+    h, dh = n_heads, d_inner // n_heads
+    proj = linear(p["in_proj"], x)[:, 0]
+    q, k, v, z, i_raw, f_raw = _mlstm_split(proj, d_inner, h)
+    f_log = -jax.nn.softplus(-f_raw.astype(jnp.float32))
+    i_log = i_raw.astype(jnp.float32)
+    rs = lambda t: t.astype(jnp.float32).reshape(b, h, dh)
+    q, k, v = rs(q) * dh ** -0.5, rs(k), rs(v)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(f_log + m, i_log)
+    f_s = jnp.exp(f_log + m - m_new)
+    i_s = jnp.exp(i_log - m_new)
+    C = f_s[..., None, None] * C + i_s[..., None, None] \
+        * jnp.einsum("bhd,bhe->bhde", k, v)
+    n = f_s[..., None] * n + i_s[..., None] * k
+    h_num = jnp.einsum("bhd,bhde->bhe", q, C)
+    qn = jnp.einsum("bhd,bhd->bh", q, n)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    y = (h_num / denom[..., None]).reshape(b, 1, d_inner).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z[:, None]))
+    return linear(p["out_proj"], y), {"C": C, "n": n, "m": m_new}
+
+
+# ====================================================================== #
+# sLSTM
+# ====================================================================== #
+def slstm_init(key, d_model, n_heads, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    h, dh = n_heads, d_model // n_heads
+    return {
+        "w_in": linear_init(k1, d_model, 4 * d_model, dtype=dtype),
+        # recurrent weights, block-diagonal per head: (h, dh, 4*dh)
+        "r": (jax.random.normal(k2, (h, dh, 4 * dh)) / dh ** 0.5
+              ).astype(dtype),
+        "b": jnp.zeros((4 * d_model,), dtype),
+        "norm": rms_norm_init(d_model, dtype),
+        "out_proj": linear_init(k3, d_model, d_model, dtype=dtype),
+    }
+
+
+def _slstm_scan(p, u, h0, c0, n0, m0, n_heads):
+    """u: (B, S, 4*d) pre-activations from the input projection."""
+    b, s, d4 = u.shape
+    d = d4 // 4
+    h_heads, dh = n_heads, d // n_heads
+
+    def step(carry, ut):
+        hprev, c, n, m = carry                       # (b, d) ... m (b, d)
+        hh = hprev.reshape(b, h_heads, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hh,
+                         _r(p)).reshape(b, 4 * d)
+        pre = ut + rec + p["b"].astype(jnp.float32)
+        i_raw, f_raw, z_raw, o_raw = jnp.split(pre, 4, axis=-1)
+        f_log = -jax.nn.softplus(-f_raw)
+        m_new = jnp.maximum(f_log + m, i_raw)
+        i_s = jnp.exp(i_raw - m_new)
+        f_s = jnp.exp(f_log + m - m_new)
+        c_new = f_s * c + i_s * jnp.tanh(z_raw)
+        n_new = f_s * n + i_s
+        h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    def _r(p):
+        return p["r"].astype(jnp.float32)
+
+    (hT, cT, nT, mT), hs = jax.lax.scan(
+        step, (h0, c0, n0, m0), u.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2), (hT, cT, nT, mT)
+
+
+def slstm_forward(p, x, *, n_heads):
+    b, s, d = x.shape
+    u = linear(p["w_in"], x).astype(jnp.float32)
+    z0 = jnp.zeros((b, d), jnp.float32)
+    hs, _ = _slstm_scan(p, u, z0, z0, z0 + 1e-6, z0, n_heads)
+    y = rms_norm(p["norm"], hs.astype(x.dtype))
+    return linear(p["out_proj"], y)
+
+
+def slstm_init_cache(batch, d_model, dtype=jnp.float32):
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return {"h": z, "c": z, "n": z + 1e-6, "m": z}
+
+
+def slstm_decode(p, x, cache, *, n_heads):
+    b, _, d = x.shape
+    u = linear(p["w_in"], x).astype(jnp.float32)
+    hs, (hT, cT, nT, mT) = _slstm_scan(
+        p, u, cache["h"], cache["c"], cache["n"], cache["m"], n_heads)
+    y = rms_norm(p["norm"], hs.astype(x.dtype))
+    return linear(p["out_proj"], y), {"h": hT, "c": cT, "n": nT, "m": mT}

@@ -1,0 +1,11 @@
+"""Sharding rules: logical activation names + parameter-path rules ->
+``jax.sharding.PartitionSpec`` for the FSDP('data') x TP('model')
+(+ 'pod' pure-DP) meshes of DESIGN.md §7."""
+from .hooks import activation_rules, constrain, current_rules
+from .rules import (ShardingRules, batch_axes, make_rules, param_sharding,
+                    param_specs)
+
+__all__ = [
+    "ShardingRules", "activation_rules", "batch_axes", "constrain",
+    "current_rules", "make_rules", "param_sharding", "param_specs",
+]

@@ -1,0 +1,77 @@
+"""Activation sharding hook.
+
+Model code calls ``constrain(x, "act_ffn")`` at propagation choke points.
+Outside a rules context (CPU smoke tests, single device) it is the
+identity; inside (dry-run / launcher) it applies
+``jax.lax.with_sharding_constraint`` with the PartitionSpec registered for
+that logical name. Rules are installed *before* ``jit(...).lower()`` so the
+trace picks them up.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec
+
+_CURRENT: Optional[Dict[str, object]] = None  # name -> (PartitionSpec, mesh)
+
+
+def current_rules() -> Optional[Dict[str, object]]:
+    return _CURRENT
+
+
+@contextlib.contextmanager
+def activation_rules(table: Dict[str, PartitionSpec], mesh=None, rules=None):
+    """Install a logical-name -> PartitionSpec table for the duration of a
+    trace. ``mesh`` (optional) turns specs into NamedSharding constraints;
+    when omitted the bare PartitionSpec is used (requires an ambient mesh
+    context at trace time). ``rules`` (a ShardingRules) additionally
+    enables ``constrain_params_tree`` (gradient resharding hints)."""
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = {"table": dict(table), "mesh": mesh, "rules": rules}
+    try:
+        yield
+    finally:
+        _CURRENT = prev
+
+
+def constrain_params_tree(tree):
+    """Constrain a param-shaped pytree (e.g. gradients) to the parameter
+    sharding — forces XLA to reduce-scatter gradients instead of
+    all-reducing them at full size. No-op outside a rules context."""
+    if _CURRENT is None or _CURRENT.get("rules") is None:
+        return tree
+    rules = _CURRENT["rules"]
+    mesh = _CURRENT["mesh"] or rules.mesh
+
+    def one(path, leaf):
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            else:
+                parts.append(str(getattr(p, "idx", p)))
+        spec = rules.param_spec("/".join(parts), leaf.ndim)
+        from .rules import sanitize_spec
+        spec = sanitize_spec(mesh, leaf.shape, spec)
+        return jax.lax.with_sharding_constraint(
+            leaf, jax.sharding.NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def constrain(x, name: str):
+    """Apply the sharding constraint registered under ``name`` (identity
+    when no rules are installed or the name has no entry)."""
+    if _CURRENT is None:
+        return x
+    spec = _CURRENT["table"].get(name)
+    if spec is None:
+        return x
+    mesh = _CURRENT["mesh"]
+    if mesh is not None:
+        spec = jax.sharding.NamedSharding(mesh, spec)
+    return jax.lax.with_sharding_constraint(x, spec)

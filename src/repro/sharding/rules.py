@@ -1,0 +1,186 @@
+"""Parameter + activation PartitionSpec rules (DESIGN.md §7).
+
+Meshes: single pod ``('data'=16, 'model'=16)``; multi-pod
+``('pod'=2, 'data'=16, 'model'=16)`` where 'pod' extends data parallelism
+(params replicated across pods; gradient all-reduce crosses pods once per
+step).
+
+Parameters are 2-D sharded: the tensor-parallel dimension over 'model',
+the FSDP dimension over 'data'. Rules are matched on the parameter's tree
+path (a '/'-joined key string); stacked scan-over-layers parameters (under
+``units/``) get a leading ``None`` for the layer dimension.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes the global batch is sharded over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Bundle of (mesh, fsdp axis, tp axis, activation table)."""
+
+    mesh: Mesh
+    fsdp: str = "data"
+    tp: str = "model"
+    # long-decode mode: KV cache sequence-sharded instead of batch-sharded
+    seq_shard_cache: bool = False
+
+    # ------------------------------------------------------------------ #
+    @property
+    def batch(self) -> Tuple[str, ...]:
+        return batch_axes(self.mesh)
+
+    def activation_table(self) -> Dict[str, P]:
+        b, tp = self.batch, self.tp
+        table = {
+            # residual stream (B, S, D)
+            "act_btd": P(b, None, None),
+            # ffn hidden (B, S, F) — TP over F
+            "act_ffn": P(b, None, tp),
+            # attention heads (B, S, H, hd) — TP over query heads
+            "act_heads": P(b, None, tp, None),
+            # mamba/xlstm inner (B, S, d_inner) — TP over channels
+            "act_inner": P(b, None, tp),
+            # logits (B, S, V) — TP over vocab
+            "logits": P(b, None, tp),
+            # MoE dispatched tokens (G, E, cap, D): token groups stay on
+            # the batch axes, experts over 'model' (EP). (§Perf C fixed a
+            # bug here: the old spec P(tp, None, None) sharded the GROUP
+            # dim over 'model', forcing collective-permute resharding
+            # around every expert einsum.)
+            "moe_dispatch": P(b, tp, None, None),
+            # per-token router probs (B, S, E)
+            "router": P(b, None, None),
+        }
+        if self.seq_shard_cache:
+            # 0.5M-token decode, batch=1: cache (B, S, Hkv, hd) sharded on S
+            table["kv_cache"] = P(None, ("data", tp) if "data" in
+                                  self.mesh.axis_names else (tp,), None, None)
+            table["ssm_state"] = P(None, tp, None, None)
+        else:
+            # cache (B, S, Hkv, hd): batch over data, KV heads over TP
+            # (§Perf B — must agree with launch.specs.cache_spec or the
+            # in-model constraint re-gathers the heads)
+            table["kv_cache"] = P(b, None, self.tp, None)
+            # ssm state (B, H, dh, N) batch-sharded, heads TP
+            table["ssm_state"] = P(b, tp, None, None)
+        return table
+
+    # ------------------------------------------------------------------ #
+    def param_spec(self, path: str, ndim: int) -> P:
+        prefix = 0
+        if "units/" in path or path.startswith("units"):
+            prefix += 1                  # scan-stacked over units
+        if "/mamba/" in path or "/mlstm/" in path:
+            prefix += 1                  # inner per-unit layer stack
+        base = max(ndim - prefix, 0)
+        spec = _match_param(path, base, self.fsdp, self.tp)
+        if prefix:
+            spec = P(*([None] * prefix), *spec)
+            spec = P(*(list(spec)[:ndim] + [None] * (ndim - len(spec))))
+        return spec
+
+
+def sanitize_spec(mesh: Mesh, shape, spec: P) -> P:
+    """Drop mesh axes whose size does not divide the dimension (jit
+    in_shardings and with_sharding_constraint require divisibility for
+    clean layouts; odd dims fall back to replicated on that dim)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, axes in enumerate(spec):
+        if axes is None or i >= len(shape):
+            out.append(None)
+            continue
+        tup = axes if isinstance(axes, tuple) else (axes,)
+        prod = 1
+        for a in tup:
+            prod *= sizes[a]
+        out.append(axes if shape[i] % prod == 0 else None)
+    return P(*out)
+
+
+# -------------------------------------------------------------------- #
+# path rules
+# -------------------------------------------------------------------- #
+def _match_param(path: str, ndim: int, fsdp: str, tp: str) -> P:
+    """Map one parameter path to its (non-stacked) PartitionSpec."""
+    leaf = path.rsplit("/", 1)[-1]
+    if leaf in ("b",) or ndim == 0:
+        return P(*([None] * ndim))
+    if "norm" in path or leaf == "scale":
+        return P(*([None] * ndim))
+    if "embed" in path and leaf == "table":            # (V, D)
+        return P(tp, fsdp)
+    if "router" in path:                               # (D, E)
+        return P(fsdp, None)
+    if "experts" in path:
+        # (E, D, F) gate/up; (E, F, D) down — experts over TP (EP)
+        if ndim == 3:
+            return P(tp, fsdp, None)
+        return P(tp, None)
+    if leaf in ("A_log", "D", "dt_bias"):              # (H,) ssm scalars
+        return P(tp) if ndim == 1 else P(*([None] * ndim))
+    if "conv" in path:                                 # (k, channels)
+        return P(None, tp) if ndim == 2 else P(*([None] * ndim))
+    # projections: direction decides which dim is TP
+    in_proj = any(k in path for k in
+                  ("wq", "wk", "wv", "gate", "up", "in_proj", "w_qkv",
+                   "q_proj", "k_proj", "v_proj"))
+    out_proj = any(k in path for k in ("wo", "down", "out_proj", "o_proj"))
+    if ndim == 2:
+        if out_proj:
+            return P(tp, fsdp)
+        if in_proj:
+            return P(fsdp, tp)
+        return P(fsdp, tp)   # default: last dim TP
+    if ndim == 1:
+        # bias of a TP-column projection: shard over tp only if it is an
+        # inner/hidden vector; keep replicated for safety
+        return P(None)
+    return P(*([None] * ndim))
+
+
+# -------------------------------------------------------------------- #
+# public helpers
+# -------------------------------------------------------------------- #
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(rules: ShardingRules, params_shape) -> Dict:
+    """PartitionSpec pytree mirroring ``params_shape`` (a pytree of
+    ShapeDtypeStructs or arrays)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: rules.param_spec(_path_str(path), len(leaf.shape)),
+        params_shape)
+
+
+def param_sharding(rules: ShardingRules, params_shape) -> Dict:
+    """NamedSharding pytree for ``jit(in_shardings=...)``."""
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(rules.mesh, spec),
+        param_specs(rules, params_shape),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_rules(mesh: Mesh, *, seq_shard_cache: bool = False) -> ShardingRules:
+    return ShardingRules(mesh=mesh, seq_shard_cache=seq_shard_cache)

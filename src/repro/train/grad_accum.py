@@ -1,0 +1,56 @@
+"""Gradient accumulation — the paper's enabling mechanism (Section IV-A.4).
+
+``accumulate_gradients`` splits the per-step batch into ``s`` micro-batches
+along the batch axis and scans over them, summing gradients. From the
+optimizer's perspective this is *exactly* one step at the full batch size
+(Eq. 1 is linear in the per-sample gradients), which is the paper's "no
+accuracy change" claim; ``tests/test_grad_accum.py`` proves the
+equivalence numerically.
+
+The accumulation buffer dtype is configurable: bf16 accumulation halves
+the working set for the >=100B configs (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def accumulate_gradients(
+    loss_and_grad: Callable,           # (params, micro_batch) -> (loss, grads)
+    params,
+    batch,
+    accum_steps: int,
+    *,
+    accum_dtype=jnp.float32,
+) -> Tuple[jnp.ndarray, Any]:
+    """Returns (mean loss, mean grads) over ``accum_steps`` micro-batches.
+
+    ``batch`` is a pytree whose leaves have leading dim B divisible by
+    ``accum_steps``; micro-batch i is ``leaf[i*b:(i+1)*b]``.
+    """
+    if accum_steps <= 1:
+        return loss_and_grad(params, batch)
+
+    def micro(leaf):
+        b = leaf.shape[0]
+        assert b % accum_steps == 0, (b, accum_steps)
+        return leaf.reshape(accum_steps, b // accum_steps, *leaf.shape[1:])
+
+    micro_batches = jax.tree.map(micro, batch)
+
+    def step(carry, mb):
+        loss_acc, grads_acc = carry
+        loss, grads = loss_and_grad(params, mb)
+        grads_acc = jax.tree.map(
+            lambda a, g: a + g.astype(accum_dtype), grads_acc, grads)
+        return (loss_acc + loss.astype(jnp.float32), grads_acc), None
+
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, accum_dtype), params)
+    (loss_sum, grads_sum), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), zeros), micro_batches)
+    inv = 1.0 / accum_steps
+    return loss_sum * inv, jax.tree.map(lambda g: g * inv, grads_sum)

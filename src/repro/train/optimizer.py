@@ -1,0 +1,86 @@
+"""AdamW with optional bf16 moments (the >=100B configs need them to fit
+16 GiB/chip; DESIGN.md §7) and the WSD schedule MiniCPM trains with."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(grads, opt: OptState, params, *, lr,
+                 b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1):
+    """Returns (new_params, new_opt). ``lr`` may be a scalar or a
+    schedule(step) callable."""
+    step = opt.step + 1
+    if callable(lr):
+        lr_t = lr(step)
+    else:
+        lr_t = lr
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * \
+            p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr_t * delta
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, opt.m, opt.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, OptState(step=step, m=new_m, v=new_v)
+
+
+# ---------------------------------------------------------------------- #
+def wsd_schedule(*, peak_lr: float, warmup_steps: int, stable_steps: int,
+                 decay_steps: int, floor: float = 0.0) -> Callable:
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): linear warmup,
+    long constant plateau, short exponential-ish (linear here) decay."""
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        decay_frac = (step - warmup_steps - stable_steps) / max(decay_steps, 1)
+        decay = peak_lr * jnp.maximum(1.0 - decay_frac, 0.0) + floor
+        return jnp.where(step < warmup_steps, warm,
+                         jnp.where(step < warmup_steps + stable_steps,
+                                   peak_lr, decay))
+    return lr
+
+
+def cosine_schedule(*, peak_lr: float, warmup_steps: int,
+                    total_steps: int, floor_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (floor_frac + (1 - floor_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr

@@ -1,0 +1,71 @@
+"""Per-architecture smoke tests (deliverable f): REDUCED variant of each
+assigned architecture runs one forward + one train step on CPU; output
+shapes and finiteness asserted."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.data import make_batch
+from repro.models import forward, init_params, param_count
+from repro.train import TrainConfig, adamw_init, make_train_step
+
+B, S = 2, 64
+
+
+def reduced(name):
+    return dataclasses.replace(get_config(name).reduced(), dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def setups():
+    return {}
+
+
+def _setup(name):
+    cfg = reduced(name)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B, S)
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_reduced_constraints(name):
+    cfg = reduced(name)
+    assert cfg.n_layers <= max(2, cfg.pattern_unit())
+    assert cfg.d_model <= 512
+    assert cfg.moe_experts <= 4
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_finite(name):
+    cfg, params, batch = _setup(name)
+    logits, aux = forward(cfg, params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{name}: non-finite logits"
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_no_nans(name):
+    cfg, params, batch = _setup(name)
+    step = jax.jit(make_train_step(cfg, TrainConfig(accum_steps=2)))
+    opt = adamw_init(params)
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert new_opt.step == 1
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b: bool(jnp.any(a != b)), params, new_params)
+    assert any(jax.tree.leaves(moved)), f"{name}: params did not update"
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_param_count_positive(name):
+    cfg = get_config(name)
+    n = cfg.param_count()
+    assert n > 0
+    assert cfg.active_param_count() <= n

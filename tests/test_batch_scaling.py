@@ -1,0 +1,82 @@
+"""Tests for Algorithm 2 (batch size scaling with best sharing benefit)."""
+import pytest
+
+from repro.core.batch_scaling import (best_sharing_config,
+                                      candidate_sub_batches)
+from repro.core.interference import InterferenceModel
+from repro.core.job import Job
+from repro.core.perf_model import PerfParams
+
+GB = 2 ** 30
+
+
+def mk_job(jid, batch=32, iters=1000, mem_base=2 * GB, mem_per_sample=0.2 * GB,
+           beta=5e-3):
+    perf = PerfParams(alpha_comp=2e-3, beta_comp=beta, alpha_comm=1e-4,
+                      beta_comm=8e-10, msg_bytes=4e8, mem_base=mem_base,
+                      mem_per_sample=mem_per_sample)
+    return Job(jid=jid, model="bert", arrival=0.0, gpus=4, iters=iters,
+               batch=batch, perf=perf)
+
+
+def test_candidate_sub_batches():
+    assert candidate_sub_batches(32) == [32, 16, 8, 4, 2, 1]
+    assert candidate_sub_batches(1) == [1]
+    assert candidate_sub_batches(6) == [6, 3, 2, 1]
+
+
+def test_memory_forces_accumulation():
+    # 11 GB GPU: running job uses 2GB + 16*0.2=5.2GB; new job (base 2GB)
+    # can only fit a few samples -> Algorithm 2 must pick b < B.
+    run = mk_job(0, batch=16)
+    run.sub_batch = 16
+    new = mk_job(1, batch=32)
+    interf = InterferenceModel(global_xi=1.2)
+    cfg = best_sharing_config(run, new, interf, gpu_capacity_bytes=11 * GB)
+    assert cfg.share
+    assert cfg.sub_batch < 32
+    assert cfg.accum_steps == new.batch // cfg.sub_batch
+    # chosen sub-batch must actually fit beside the running job
+    run_mem = run.perf.mem_bytes(run.sub_batch)
+    assert new.perf.fits(cfg.sub_batch, 11 * GB, other_mem=run_mem)
+
+
+def test_no_fit_means_no_share():
+    run = mk_job(0, batch=32, mem_base=8 * GB)
+    run.sub_batch = 32
+    new = mk_job(1, batch=32, mem_base=8 * GB)
+    interf = InterferenceModel(global_xi=1.1)
+    cfg = best_sharing_config(run, new, interf, gpu_capacity_bytes=11 * GB)
+    assert not cfg.share
+    assert cfg.decision is None
+
+
+def test_high_interference_rejects_sharing():
+    run = mk_job(0, iters=1000)
+    run.sub_batch = run.batch
+    new = mk_job(1, iters=1000)
+    interf = InterferenceModel(global_xi=4.0)
+    cfg = best_sharing_config(run, new, interf, gpu_capacity_bytes=64 * GB)
+    assert not cfg.share  # Theorem 1 says sequential
+
+
+def test_low_interference_accepts_sharing():
+    run = mk_job(0, iters=1000)
+    run.sub_batch = run.batch
+    new = mk_job(1, iters=1000)
+    interf = InterferenceModel(global_xi=1.05)
+    cfg = best_sharing_config(run, new, interf, gpu_capacity_bytes=64 * GB)
+    assert cfg.share
+    assert cfg.avg_jct < run.solo_t_iter * 1000 + 1e-9 + 0.5 * new.solo_t_iter * 1000
+
+
+def test_picks_best_of_feasible_sub_batches():
+    # ample memory: b=B should win because accumulation only adds
+    # per-step overhead (alpha_comp) here
+    run = mk_job(0)
+    run.sub_batch = run.batch
+    new = mk_job(1, mem_base=1 * GB, mem_per_sample=0.01 * GB)
+    interf = InterferenceModel(global_xi=1.1)
+    cfg = best_sharing_config(run, new, interf, gpu_capacity_bytes=64 * GB)
+    assert cfg.sub_batch == new.batch
+    assert cfg.accum_steps == 1

@@ -1,0 +1,49 @@
+"""Co-scheduled execution: the fused pair program advances both jobs, the
+structural xi model is sane, and the measured ratios obey the
+time-multiplexing bounds."""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.coschedule import (JobSpec, _make_state, make_pair_step,
+                                   measure_pair, structural_xi)
+
+
+def _spec(name, **kw):
+    cfg = dataclasses.replace(get_config(name).reduced(), dtype="float32")
+    return JobSpec(cfg, batch=2, seq=32, **kw)
+
+
+def test_pair_step_advances_both_jobs():
+    sa, sb = _spec("minicpm-2b"), _spec("qwen2-vl-2b", accum_steps=2)
+    pa, oa, ba = _make_state(sa)
+    pb, ob, bb = _make_state(sb)
+    pair = make_pair_step(sa, sb)
+    pa2, oa2, ma, pb2, ob2, mb = pair(pa, oa, ba, pb, ob, bb)
+    assert int(oa2.step) == 1 and int(ob2.step) == 1
+    assert np.isfinite(float(ma["loss"])) and np.isfinite(float(mb["loss"]))
+    moved_a = any(bool((x != y).any()) for x, y in
+                  zip(jax.tree.leaves(pa), jax.tree.leaves(pa2)))
+    moved_b = any(bool((x != y).any()) for x, y in
+                  zip(jax.tree.leaves(pb), jax.tree.leaves(pb2)))
+    assert moved_a and moved_b
+
+
+def test_structural_xi_bounds():
+    # strict time multiplexing: xi = (t_me + t_other) / t_me
+    assert structural_xi(1.0, 1.0) == 2.0
+    assert structural_xi(2.0, 1.0) == 1.5
+    # overlap credits reduce xi toward 1
+    assert 1.0 < structural_xi(1.0, 1.0, overlap=0.5) < 2.0
+    # HBM pressure adds a penalty
+    assert structural_xi(1.0, 1.0, mem_frac=1.0) > 2.0
+
+
+def test_measured_xi_exceeds_one():
+    sa, sb = _spec("minicpm-2b"), _spec("minicpm-2b", seed=3)
+    r = measure_pair(sa, sb, iters=1)
+    assert r["xi_a"] > 1.0 and r["xi_b"] > 1.0
+    # fused program can't be faster than the slower solo job
+    assert r["t_pair"] >= 0.9 * max(r["t_a_solo"], r["t_b_solo"])

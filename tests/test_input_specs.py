@@ -1,0 +1,89 @@
+"""Input-shape layer coverage: every (arch x shape) combination produces
+well-formed ShapeDtypeStruct stand-ins WITHOUT allocating; skip rules and
+long-context variants match DESIGN.md §5; and this test process sees ONE
+device (the 512-device XLA flag must stay inside dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.shapes import (INPUT_SHAPES, LONG_CTX_WINDOW,
+                                  input_specs, shape_applicable,
+                                  variant_for_shape)
+
+
+def test_tests_see_one_device():
+    # smoke tests/benches must NOT inherit the dry-run's 512 fake devices
+    assert len(jax.devices()) == 1
+
+
+def test_shape_catalogue():
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("shape_name", sorted(INPUT_SHAPES))
+def test_input_specs_all_combos(arch, shape_name):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    skip = shape_applicable(cfg, shape)
+    if skip:
+        assert arch == "whisper-tiny" and shape_name == "long_500k"
+        return
+    specs = input_specs(cfg, shape)
+    # everything is a ShapeDtypeStruct — no device allocation happened
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+    if shape.kind in ("train", "prefill"):
+        assert specs["tokens"].shape == (shape.global_batch, shape.seq_len)
+        assert specs["tokens"].dtype == jnp.int32
+        if shape.kind == "train":
+            assert specs["labels"].shape == specs["tokens"].shape
+        if cfg.family == "vlm":
+            assert specs["vision_embeds"].shape == (
+                shape.global_batch, cfg.vision_tokens, cfg.d_model)
+        if cfg.family == "audio":
+            assert specs["frames"].shape == (
+                shape.global_batch, cfg.encoder_seq, cfg.d_model)
+    else:
+        assert specs["tokens"].shape == (shape.global_batch, 1)
+        cache = specs["cache"]
+        assert "units" in cache and "index" in cache
+        vcfg = variant_for_shape(cfg, shape)
+        # KV caches sized seq_len, or the sliding window for long-context
+        # dense variants; SSM caches are O(1) in seq_len
+        for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+            keys = [str(getattr(p, "key", "")) for p in path]
+            if keys[-1] in ("k", "v") and "cross" not in keys:
+                expect = (min(vcfg.sliding_window, shape.seq_len)
+                          if vcfg.sliding_window else shape.seq_len)
+                assert leaf.shape[2] == expect, (arch, shape_name, keys)
+
+
+def test_long_ctx_variant_rules():
+    long = INPUT_SHAPES["long_500k"]
+    # dense/vlm/moe get the sliding window; ssm/hybrid run natively
+    assert variant_for_shape(get_config("glm4-9b"), long).sliding_window \
+        == LONG_CTX_WINDOW
+    assert variant_for_shape(get_config("llama4-maverick-400b-a17b"),
+                             long).sliding_window == LONG_CTX_WINDOW
+    assert variant_for_shape(get_config("xlstm-1.3b"), long).sliding_window \
+        == 0
+    assert variant_for_shape(get_config("zamba2-7b"), long).sliding_window \
+        == 0
+    # other shapes never mutate the config
+    assert variant_for_shape(get_config("glm4-9b"),
+                             INPUT_SHAPES["decode_32k"]).sliding_window == 0
+
+
+def test_ssm_cache_is_constant_in_seq():
+    cfg = get_config("xlstm-1.3b")
+    s32 = input_specs(cfg, INPUT_SHAPES["decode_32k"])
+    s500 = input_specs(cfg, INPUT_SHAPES["long_500k"])
+    n32 = sum(l.size for l in jax.tree.leaves(s32["cache"]))
+    n500 = sum(l.size for l in jax.tree.leaves(s500["cache"]))
+    # batch 128 -> 1 shrinks it; per-sequence state is seq-independent
+    assert n500 < n32

@@ -1,0 +1,107 @@
+"""Unit + property tests for the Eq. 3/4/7 performance model."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.perf_model import (GPU_2080TI, TPU_V5E, PerfParams,
+                                   derive_perf_params, fit_comp_params,
+                                   infer_xi, ring_allreduce_bytes)
+
+
+def mk(alpha_c=2e-3, beta_c=1e-2, alpha_n=1e-4, beta_n=8e-10, msg=4e8,
+       delta=2.0, **kw):
+    return PerfParams(alpha_comp=alpha_c, beta_comp=beta_c,
+                      alpha_comm=alpha_n, beta_comm=beta_n, msg_bytes=msg,
+                      delta=delta, **kw)
+
+
+def test_t_iter_s1_is_overlap_formula():
+    p = mk()
+    tc = p.t_comp(32)
+    tn = p.t_comm()
+    expect = (tc ** 2 + tn ** 2) ** 0.5
+    assert p.t_iter(32, 1) == pytest.approx(expect)
+
+
+def test_t_iter_eq7_structure():
+    p = mk()
+    s = 4
+    tc = p.t_comp(32 / s)
+    tn = p.t_comm()
+    expect = (s - 1) * tc + (tc ** p.delta + tn ** p.delta) ** (1 / p.delta)
+    assert p.t_iter(32, s) == pytest.approx(expect)
+
+
+def test_accumulation_reduces_memory_not_batch_semantics():
+    p = mk(mem_base=2e9, mem_per_sample=1e8)
+    # memory shrinks with sub-batch, effective batch (32) unchanged
+    assert p.mem_bytes(32) > p.mem_bytes(8)
+    assert p.t_iter(32, 4) > 0
+
+
+def test_invalid_accum_steps():
+    with pytest.raises(ValueError):
+        mk().t_iter(32, 0)
+
+
+@given(st.floats(1e-4, 1e-1), st.floats(1e-4, 1e-1), st.floats(1e-5, 1e-2),
+       st.integers(1, 6))
+@settings(max_examples=100, deadline=None)
+def test_t_iter_positive_and_bounded_below_by_compute(alpha_c, beta_c,
+                                                      alpha_n, log2_s):
+    s = 2 ** (log2_s - 1)
+    p = mk(alpha_c=alpha_c, beta_c=beta_c, alpha_n=alpha_n)
+    B = 32
+    t = p.t_iter(B, s)
+    # total compute alone is a lower bound (communication only adds)
+    assert t >= s * p.t_comp(B / s) - 1e-12
+    # and compute+comm fully serialized is an upper bound
+    assert t <= s * p.t_comp(B / s) + p.t_comm() + 1e-12
+
+
+@given(st.floats(1e-4, 1.0), st.floats(1e-5, 0.5))
+@settings(max_examples=100, deadline=None)
+def test_fit_recovers_linear_model(alpha, beta):
+    batches = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0]
+    times = [alpha + beta * b for b in batches]
+    a, b = fit_comp_params(batches, times)
+    assert a == pytest.approx(alpha, rel=1e-6, abs=1e-9)
+    assert b == pytest.approx(beta, rel=1e-6, abs=1e-9)
+
+
+def test_fit_rejects_degenerate():
+    with pytest.raises(ValueError):
+        fit_comp_params([2.0, 2.0], [1.0, 1.0])
+    with pytest.raises(ValueError):
+        fit_comp_params([1.0], [1.0])
+
+
+def test_ring_allreduce_bytes():
+    assert ring_allreduce_bytes(100.0, 1) == 0.0
+    assert ring_allreduce_bytes(100.0, 4) == pytest.approx(150.0)
+    # asymptote: 2x message size
+    assert ring_allreduce_bytes(100.0, 10**6) == pytest.approx(200.0, rel=1e-4)
+
+
+def test_infer_xi():
+    assert infer_xi(1.0, 1.5) == pytest.approx(1.5)
+    with pytest.raises(ValueError):
+        infer_xi(0.0, 1.0)
+
+
+def test_derive_perf_params_tpu_vs_gpu():
+    kw = dict(flops_per_sample=8.4e10, param_bytes=4.4e8, n_workers=8,
+              act_bytes_per_sample=4.5e7, opt_bytes=1.3e9)
+    tpu = derive_perf_params(hw=TPU_V5E, **kw)
+    gpu = derive_perf_params(hw=GPU_2080TI, **kw)
+    # per-sample compute must be faster on v5e than 2080Ti
+    assert tpu.beta_comp < gpu.beta_comp
+    assert tpu.msg_bytes == pytest.approx(gpu.msg_bytes)
+    assert tpu.param_bytes == 4.4e8
+
+
+def test_throughput_matches_eq14():
+    p = mk()
+    assert p.throughput(32, 2) == pytest.approx(32 / p.t_iter(32, 2))

@@ -1,0 +1,191 @@
+"""System-invariant tests for all scheduling policies, driven by random
+traces (hypothesis). The cluster allocator itself raises on any violation
+of the <=C jobs/GPU packing constraint, so a completed simulation already
+certifies packing; we additionally check gang semantics, completion,
+non-preemption for the non-preemptive policies, and policy-specific
+behaviours."""
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (ClusterState, InterferenceModel, Simulator,
+                        make_scheduler, paper_interference_model)
+from repro.core.schedulers import ALL_POLICIES
+from repro.core.trace import TraceConfig, generate_trace
+
+NONPREEMPTIVE = ["fifo", "sjf", "sjf-ffs", "sjf-bsbf"]
+
+
+def run_trace(policy, n_jobs=16, seed=0, servers=2, gps=4, xi=None,
+              max_gpus=8):
+    demand = tuple((g, p) for g, p in ((1, .4), (2, .25), (4, .2), (8, .15))
+                   if g <= max_gpus)
+    cfg = TraceConfig(n_jobs=n_jobs, seed=seed, mean_interarrival=60.0,
+                      min_iters=50, max_iters=2000, gpu_demand=demand)
+    jobs = generate_trace(cfg)
+    cluster = ClusterState(n_servers=servers, gpus_per_server=gps,
+                           gpu_capacity_bytes=11 * 2**30)
+    interf = (InterferenceModel(global_xi=xi) if xi
+              else paper_interference_model())
+    sim = Simulator(cluster, jobs, make_scheduler(policy), interference=interf)
+    return sim.run()
+
+
+@pytest.mark.parametrize("policy", sorted(ALL_POLICIES))
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+def test_all_jobs_complete_and_invariants(policy, seed):
+    res = run_trace(policy, seed=seed)
+    assert len(res.jobs) == 16
+    for j in res.jobs:
+        assert j.finish_time is not None
+        assert j.iters_done == pytest.approx(j.iters, rel=1e-5)
+        assert j.finish_time >= j.arrival
+        assert j.jct() >= 0
+        # a job can never beat its best-possible execution. For the
+        # elastic policy the floor must range over allowed allocations:
+        # comm-bound jobs (NCF) are genuinely faster per-sample at FEWER
+        # workers (their all-reduce dwarfs compute — the paper's Fig. 2).
+        import copy
+        floors = [min(j.perf.t_iter(j.batch, s) for s in (1, 2, 4, 8))]
+        if policy == "pollux":
+            for n in (1, 2, 4, 8):
+                if n >= j.gpus:
+                    break
+                jc = copy.deepcopy(j)
+                jc.alloc_gpus = n
+                floors.append(jc.base_t_iter())
+        assert j.jct() >= 0.95 * min(floors) * j.iters
+        if policy in NONPREEMPTIVE:
+            assert j.preemptions == 0
+    assert res.makespan >= max(j.arrival for j in res.jobs)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_fifo_starts_in_arrival_order(seed):
+    res = run_trace("fifo", seed=seed)
+    jobs = sorted(res.jobs, key=lambda j: j.arrival)
+    starts = [j.first_start_time for j in jobs]
+    assert starts == sorted(starts)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_exclusive_policies_never_share(seed):
+    """FIFO/SJF/Tiresias must keep <=1 job per GPU at all times; we verify
+    via the event log (start/finish/preempt intervals per GPU)."""
+    for policy in ("fifo", "sjf"):
+        res = run_trace(policy, seed=seed)
+        # rebuild occupancy over time from the log
+        cluster_busy = {}
+        # log entries: (time, kind, jid, [gpus])
+        sim_log = res.jobs  # placeholders; occupancy verified via simulator
+        # simpler: rerun with a C=1 cluster; identical schedule must succeed
+        cfg = TraceConfig(n_jobs=16, seed=seed, mean_interarrival=60.0,
+                          min_iters=50, max_iters=2000,
+                          gpu_demand=((1, .4), (2, .25), (4, .2), (8, .15)))
+        jobs = generate_trace(cfg)
+        cluster = ClusterState(n_servers=2, gpus_per_server=4,
+                               max_jobs_per_gpu=1,
+                               gpu_capacity_bytes=11 * 2**30)
+        sim = Simulator(cluster, jobs, make_scheduler(policy),
+                        interference=paper_interference_model())
+        sim.run()  # raises if the policy ever double-books a GPU
+
+
+def test_sharing_policies_do_share():
+    """Under pressure with mild interference, SJF-FFS and SJF-BSBF must
+    actually co-locate jobs (otherwise they degenerate to SJF)."""
+    shared_seen = {}
+    for policy in ("sjf-ffs", "sjf-bsbf"):
+        cfg = TraceConfig(n_jobs=24, seed=3, mean_interarrival=20.0,
+                          min_iters=500, max_iters=5000,
+                          gpu_demand=((2, .3), (4, .4), (8, .3)))
+        jobs = generate_trace(cfg)
+        cluster = ClusterState(n_servers=2, gpus_per_server=4,
+                               gpu_capacity_bytes=11 * 2**30)
+        sim = Simulator(cluster, jobs, make_scheduler(policy),
+                        interference=InterferenceModel(global_xi=1.1))
+        res = sim.run()
+        # detect overlap: two running jobs sharing a GPU at some instant
+        intervals = {}
+        for j in res.jobs:
+            intervals[j.jid] = (j.first_start_time, j.finish_time, j.placement)
+        shared = False
+        for t, kind, jid, *rest in sim.log:
+            if kind == "start" and rest:
+                gpus = rest[0]
+                for other, (s, f, _) in intervals.items():
+                    if other == jid:
+                        continue
+        # fall back to log-based: any GPU appearing in two concurrent starts
+        active = {}
+        for entry in sim.log:
+            if entry[1] == "start":
+                _, _, jid, gpus = entry
+                for g in gpus:
+                    active.setdefault(g, []).append(jid)
+        for g, jids in active.items():
+            # overlap iff two jobs on one GPU with overlapping [start,finish)
+            for i in range(len(jids)):
+                for k in range(i + 1, len(jids)):
+                    a, b = intervals[jids[i]], intervals[jids[k]]
+                    if max(a[0], b[0]) < min(a[1], b[1]) - 1e-6:
+                        shared = True
+        shared_seen[policy] = shared
+    assert shared_seen["sjf-ffs"], "SJF-FFS never shared under pressure"
+    assert shared_seen["sjf-bsbf"], "SJF-BSBF never shared under pressure"
+
+
+def test_bsbf_avoids_sharing_under_high_interference():
+    """Fig. 6b mechanism: with xi large, BSBF must refuse what FFS accepts."""
+    def run(policy, xi):
+        cfg = TraceConfig(n_jobs=24, seed=7, mean_interarrival=20.0,
+                          min_iters=500, max_iters=5000,
+                          gpu_demand=((2, .3), (4, .4), (8, .3)))
+        jobs = generate_trace(cfg)
+        cluster = ClusterState(n_servers=2, gpus_per_server=4,
+                               gpu_capacity_bytes=11 * 2**30)
+        sim = Simulator(cluster, jobs, make_scheduler(policy),
+                        interference=InterferenceModel(global_xi=xi))
+        return sim.run()
+
+    res_ffs = run("sjf-ffs", 3.0)
+    res_bsbf = run("sjf-bsbf", 3.0)
+    assert res_bsbf.avg_jct() <= res_ffs.avg_jct() * 1.001
+    # and with negligible interference the two coincide (paper Fig. 6b)
+    res_ffs_lo = run("sjf-ffs", 1.05)
+    res_bsbf_lo = run("sjf-bsbf", 1.05)
+    assert res_bsbf_lo.avg_jct() == pytest.approx(res_ffs_lo.avg_jct(),
+                                                  rel=0.15)
+
+
+def test_make_scheduler_rejects_unknown():
+    with pytest.raises(ValueError):
+        make_scheduler("nope")
+
+
+def test_paper_headline_ordering():
+    """The paper's headline result on a mid-size workload: SJF-BSBF beats
+    SJF-FFS, Tiresias and FIFO on average JCT."""
+    import statistics
+    out = {}
+    for policy in ("fifo", "tiresias", "sjf-ffs", "sjf-bsbf"):
+        vals = []
+        for seed in range(3):
+            cfg = TraceConfig(n_jobs=60, seed=seed, mean_interarrival=45.0,
+                              min_iters=200, max_iters=20000,
+                              gpu_demand=((1, .22), (2, .15), (4, .2),
+                                          (8, .22), (12, .09), (16, .12)))
+            jobs = generate_trace(cfg)
+            cluster = ClusterState(n_servers=16, gpus_per_server=4,
+                                   gpu_capacity_bytes=11 * 2**30)
+            sim = Simulator(cluster, jobs, make_scheduler(policy),
+                            interference=paper_interference_model())
+            vals.append(sim.run().avg_jct())
+        out[policy] = statistics.mean(vals)
+    assert out["sjf-bsbf"] < out["sjf-ffs"]
+    assert out["sjf-bsbf"] < out["tiresias"]
+    assert out["sjf-bsbf"] < out["fifo"]

@@ -1,0 +1,105 @@
+"""Deterministic simulator tests: hand-computed two-job timelines must
+match the analytic pair model, progress conservation, waiting accounting."""
+import pytest
+
+from repro.core import (ClusterState, InterferenceModel, Job, PerfParams,
+                        Simulator, make_scheduler)
+from repro.core.pair import PairJob, pair_timeline
+
+GB = 2 ** 30
+
+
+def mk_job(jid, arrival, gpus, iters, beta=1e-2, batch=10):
+    perf = PerfParams(alpha_comp=0.0, beta_comp=beta, alpha_comm=0.0,
+                      beta_comm=0.0, msg_bytes=0.0, mem_base=1 * GB,
+                      mem_per_sample=0.01 * GB)
+    return Job(jid=jid, model="m", arrival=arrival, gpus=gpus, iters=iters,
+               batch=batch, perf=perf)
+
+
+def test_single_job_runs_solo_exactly():
+    job = mk_job(0, arrival=0.0, gpus=4, iters=100)
+    cluster = ClusterState(n_servers=1, gpus_per_server=4)
+    sim = Simulator(cluster, [job], make_scheduler("fifo"))
+    res = sim.run()
+    # t_iter = beta*batch = 0.1s; 100 iters -> 10s
+    assert job.finish_time == pytest.approx(10.0)
+    assert res.makespan == pytest.approx(10.0)
+    assert job.queueing_delay() == 0.0
+
+
+def test_two_jobs_sequential_when_exclusive():
+    j0 = mk_job(0, 0.0, 4, 100)
+    j1 = mk_job(1, 1.0, 4, 50)
+    cluster = ClusterState(n_servers=1, gpus_per_server=4)
+    sim = Simulator(cluster, [j0, j1], make_scheduler("fifo"))
+    sim.run()
+    assert j0.finish_time == pytest.approx(10.0)
+    assert j1.first_start_time == pytest.approx(10.0)
+    assert j1.finish_time == pytest.approx(15.0)
+    assert j1.queueing_delay() == pytest.approx(9.0)
+
+
+def test_shared_pair_matches_pair_timeline():
+    """When SJF-BSBF decides to share, the simulated finish times must
+    reproduce the Theorem-1 timeline (same xi both sides)."""
+    xi = 1.2
+    j0 = mk_job(0, 0.0, 4, 200)          # t_iter 0.1 -> solo 20s
+    j1 = mk_job(1, 2.0, 4, 100)          # arrives while j0 runs
+    cluster = ClusterState(n_servers=1, gpus_per_server=4)
+    interf = InterferenceModel(global_xi=xi)
+    sim = Simulator(cluster, [j0, j1], make_scheduler("sjf-bsbf"),
+                    interference=interf)
+    sim.run()
+    # at t=2: j0 has 180 iters left; pair model from that instant:
+    a = PairJob(t_iter=0.1, iters=180, xi=xi)
+    b = PairJob(t_iter=0.1, iters=100, xi=xi)
+    t_a, t_b = pair_timeline(a, b, 0.0)
+    assert j0.finish_time == pytest.approx(2.0 + t_a, rel=1e-6)
+    assert j1.finish_time == pytest.approx(2.0 + t_b, rel=1e-6)
+    assert j1.queueing_delay() == pytest.approx(0.0, abs=1e-9)
+
+
+def test_progress_conservation_under_rate_changes():
+    """Total processed iterations at any completion equal the job's I_k even
+    when co-runners come and go (rates change mid-flight)."""
+    jobs = [mk_job(0, 0.0, 4, 300), mk_job(1, 1.0, 4, 100),
+            mk_job(2, 2.0, 4, 50)]
+    cluster = ClusterState(n_servers=1, gpus_per_server=4)
+    sim = Simulator(cluster, jobs, make_scheduler("sjf-ffs"),
+                    interference=InterferenceModel(global_xi=1.3))
+    res = sim.run()
+    for j in res.jobs:
+        assert j.iters_done == pytest.approx(j.iters, rel=1e-9)
+
+
+def test_gang_all_or_nothing():
+    """A job must never run on fewer GPUs than requested."""
+    j0 = mk_job(0, 0.0, 3, 100)
+    cluster = ClusterState(n_servers=1, gpus_per_server=4)
+    sim = Simulator(cluster, [j0], make_scheduler("fifo"))
+    sim.run()
+    # log records the full placement at start
+    starts = [e for e in sim.log if e[1] == "start"]
+    assert len(starts[0][3]) == 3
+
+
+def test_deadlock_detection():
+    """A job requesting more GPUs than the cluster has must raise."""
+    j0 = mk_job(0, 0.0, 8, 100)
+    cluster = ClusterState(n_servers=1, gpus_per_server=4)
+    sim = Simulator(cluster, [j0], make_scheduler("fifo"))
+    with pytest.raises(RuntimeError, match="deadlock"):
+        sim.run()
+
+
+def test_restart_penalty_accounted_as_waiting():
+    """Preempted jobs pay the restart penalty and it shows up as waiting."""
+    jobs = [mk_job(0, 0.0, 8, 20000), mk_job(1, 10.0, 8, 20)]
+    cluster = ClusterState(n_servers=2, gpus_per_server=4)
+    sim = Simulator(cluster, jobs, make_scheduler("tiresias"),
+                    restart_penalty=30.0)
+    res = sim.run()
+    j0 = res.jobs[0]
+    if j0.preemptions > 0:
+        assert j0.waiting_time > 0.0

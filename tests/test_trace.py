@@ -1,0 +1,54 @@
+"""Workload generator tests."""
+import pytest
+
+from repro.core.tasks import PAPER_TASK_PROFILES
+from repro.core.trace import (TraceConfig, generate_trace, physical_trace,
+                              simulation_trace)
+
+
+def test_physical_trace_shape():
+    jobs = physical_trace(seed=0)
+    assert len(jobs) == 30
+    small = [j for j in jobs if j.gpus <= 8]
+    large = [j for j in jobs if j.gpus in (12, 16)]
+    assert len(small) == 20
+    assert len(large) == 10
+    for j in jobs:
+        assert 100 <= j.iters <= 5000
+        assert j.model in PAPER_TASK_PROFILES
+    arr = [j.arrival for j in jobs]
+    assert arr == sorted(arr)
+
+
+def test_trace_determinism():
+    a = simulation_trace(n_jobs=50, seed=42)
+    b = simulation_trace(n_jobs=50, seed=42)
+    assert [(j.model, j.arrival, j.gpus, j.iters) for j in a] == \
+           [(j.model, j.arrival, j.gpus, j.iters) for j in b]
+    c = simulation_trace(n_jobs=50, seed=43)
+    assert [(j.arrival) for j in a] != [(j.arrival) for j in c]
+
+
+def test_gpu_demand_support():
+    cfg = TraceConfig(n_jobs=300, seed=1,
+                      gpu_demand=((1, 0.5), (4, 0.3), (8, 0.2)))
+    jobs = generate_trace(cfg)
+    assert {j.gpus for j in jobs} <= {1, 4, 8}
+    # rough distribution sanity
+    ones = sum(1 for j in jobs if j.gpus == 1)
+    assert 0.3 < ones / 300 < 0.7
+
+
+def test_iter_bounds():
+    cfg = TraceConfig(n_jobs=200, seed=2, min_iters=100, max_iters=5000)
+    for j in generate_trace(cfg):
+        assert 100 <= j.iters <= 5000 * 1.01
+
+
+def test_perf_params_scale_with_gpus():
+    """More workers -> larger all-reduce message per worker (ring)."""
+    cfg1 = TraceConfig(n_jobs=1, seed=3, gpu_demand=((2, 1.0),))
+    cfg2 = TraceConfig(n_jobs=1, seed=3, gpu_demand=((16, 1.0),))
+    j2 = generate_trace(cfg1)[0]
+    j16 = generate_trace(cfg2)[0]
+    assert j16.perf.msg_bytes > j2.perf.msg_bytes
