@@ -20,12 +20,13 @@ POLICIES = ("fifo", "sjf", "srsf", "tiresias", "pollux", "sjf-ffs",
 
 def run_policy(policy: str, jobs, *, n_servers=16, gpus_per_server=4,
                interference: Optional[InterferenceModel] = None,
-               capacity_gb: float = 11.0):
+               capacity_gb: float = 11.0, engine: Optional[str] = None):
     cluster = ClusterState(n_servers=n_servers,
                            gpus_per_server=gpus_per_server,
                            gpu_capacity_bytes=capacity_gb * 2 ** 30)
     sim = Simulator(cluster, copy.deepcopy(jobs), make_scheduler(policy),
-                    interference=interference or paper_interference_model())
+                    interference=interference or paper_interference_model(),
+                    engine=engine)
     return sim.run()
 
 
@@ -40,17 +41,7 @@ def run_all_policies(jobs, policies: Sequence[str] = POLICIES, **kw
 
 
 def table(results: Dict[str, object], title: str) -> str:
-    lines = [title, f"{'policy':<10} {'makespan':>10} {'avg JCT':>10} "
-                    f"{'JCT lg':>9} {'JCT sm':>9} {'queue':>9} "
-                    f"{'q lg':>8} {'q sm':>8}"]
-    for p, r in results.items():
-        s = r.summary()
-        lines.append(
-            f"{p:<10} {s['makespan']:>10.1f} {s['avg_jct']:>10.1f} "
-            f"{s['avg_jct_large']:>9.1f} {s['avg_jct_small']:>9.1f} "
-            f"{s['avg_queue']:>9.1f} {s['avg_queue_large']:>8.1f} "
-            f"{s['avg_queue_small']:>8.1f}")
-    return "\n".join(lines)
+    return policy_table({p: r.summary() for p, r in results.items()}, title)
 
 
 def save_json(name: str, payload) -> str:
@@ -63,3 +54,17 @@ def save_json(name: str, payload) -> str:
 
 def summaries(results: Dict[str, object]) -> Dict[str, Dict]:
     return {p: r.summary() for p, r in results.items()}
+
+
+def policy_table(payload: Dict[str, Dict], title: str) -> str:
+    """`table()` over {policy: summary} dicts (sweep-row payloads)."""
+    lines = [title, f"{'policy':<10} {'makespan':>10} {'avg JCT':>10} "
+                    f"{'JCT lg':>9} {'JCT sm':>9} {'queue':>9} "
+                    f"{'q lg':>8} {'q sm':>8}"]
+    for p, s in payload.items():
+        lines.append(
+            f"{p:<10} {s['makespan']:>10.1f} {s['avg_jct']:>10.1f} "
+            f"{s['avg_jct_large']:>9.1f} {s['avg_jct_small']:>9.1f} "
+            f"{s['avg_queue']:>9.1f} {s['avg_queue_large']:>8.1f} "
+            f"{s['avg_queue_small']:>8.1f}")
+    return "\n".join(lines)

@@ -1,39 +1,36 @@
 """Figures 4-5 — JCT distributions (CDF deciles) and per-DL-task average
-queueing time, physical (30-job) and simulation (240-job) workloads."""
+queueing time, physical (30-job) and simulation (240-job) workloads.
+Both workloads' policy runs fan out as one parallel sweep; the per-job
+metrics are reduced inside the workers (collect=...)."""
 from __future__ import annotations
 
-from collections import defaultdict
-from typing import Dict
+from repro.core.sweep import ScenarioSpec, run_sweep
 
-import numpy as np
+from .common import POLICIES, save_json
 
-from repro.core import physical_trace, simulation_trace
-
-from .common import POLICIES, run_all_policies, save_json
-
-
-def _jct_deciles(res) -> list:
-    jcts = res.jct_list()
-    return [float(np.percentile(jcts, q)) for q in range(10, 101, 10)]
+WORKLOADS = (
+    # (tag, trace kind, n_jobs, n_servers)
+    ("fig4_physical", "physical", 30, 4),
+    ("fig5_simulation", "simulation", 240, 16),
+)
 
 
-def _queue_by_model(res) -> Dict[str, float]:
-    acc = defaultdict(list)
-    for j in res.jobs:
-        acc[j.model].append(j.queueing_delay())
-    return {m: float(np.mean(v)) for m, v in sorted(acc.items())}
-
-
-def run(verbose: bool = True):
+def run(verbose: bool = True, workers=None):
+    specs = [
+        ScenarioSpec(policy=p, trace=trace, n_jobs=n_jobs,
+                     n_servers=ns, gpus_per_server=4, tag=tag,
+                     collect=("jct_deciles", "queue_by_model"))
+        for tag, trace, n_jobs, ns in WORKLOADS for p in POLICIES
+    ]
+    rows = run_sweep(specs, workers=workers)
     payload = {}
-    for tag, jobs, ns in (("fig4_physical", physical_trace(), 4),
-                          ("fig5_simulation", simulation_trace(240), 16)):
-        results = run_all_policies(jobs, n_servers=ns, gpus_per_server=4)
-        payload[tag] = {
-            p: {"jct_deciles": _jct_deciles(r),
-                "queue_by_model": _queue_by_model(r)}
-            for p, r in results.items()}
-        if verbose:
+    for row in rows:
+        payload.setdefault(row["tag"], {})[row["policy"]] = {
+            "jct_deciles": row["jct_deciles"],
+            "queue_by_model": row["queue_by_model"],
+        }
+    if verbose:
+        for tag, *_ in WORKLOADS:
             print(f"{tag}: median JCT per policy: " + ", ".join(
                 f"{p}={payload[tag][p]['jct_deciles'][4]:.0f}s"
                 for p in POLICIES))

@@ -1,23 +1,31 @@
 """Figure 6a — sensitivity to workload intensity: the 240-job trace scaled
-0.5x-2x in submission rate (120..480 jobs at matching arrival rates)."""
+0.5x-2x in submission rate (120..480 jobs at matching arrival rates).
+All (load, policy) scenarios fan out as one parallel sweep."""
 from __future__ import annotations
 
-from repro.core import simulation_trace
+from repro.core.sweep import ScenarioSpec, run_sweep
 
-from .common import POLICIES, run_all_policies, save_json
+from .common import POLICIES, save_json
+
+SCALES = ((0.5, 120), (1.0, 240), (1.5, 360), (2.0, 480))
 
 
-def run(verbose: bool = True):
+def run(verbose: bool = True, workers=None):
+    specs = [
+        ScenarioSpec(policy=p, n_jobs=n_jobs, load_scale=scale,
+                     n_servers=16, gpus_per_server=4, tag=f"{scale}x")
+        for scale, n_jobs in SCALES for p in POLICIES
+    ]
+    rows = run_sweep(specs, workers=workers)
     payload = {}
-    for scale, n_jobs in ((0.5, 120), (1.0, 240), (1.5, 360), (2.0, 480)):
-        jobs = simulation_trace(n_jobs=n_jobs, load_scale=scale)
-        results = run_all_policies(jobs, n_servers=16, gpus_per_server=4)
-        payload[f"{scale}x"] = {p: r.summary()["avg_jct"]
-                                for p, r in results.items()}
-        if verbose:
-            row = payload[f"{scale}x"]
+    for row in rows:
+        payload.setdefault(row["tag"], {})[row["policy"]] = \
+            row["summary"]["avg_jct"]
+    if verbose:
+        for scale, n_jobs in SCALES:
+            r = payload[f"{scale}x"]
             print(f"load {scale}x ({n_jobs} jobs): " + ", ".join(
-                f"{p}={row[p]:.0f}s" for p in POLICIES))
+                f"{p}={r[p]:.0f}s" for p in POLICIES))
     save_json("fig6a_load.json", payload)
     return payload
 

@@ -1,29 +1,35 @@
 """Figure 6b — sensitivity to the interference ratio: inject a global xi
 for all sharing pairs and compare the sharing policies. The paper's
 finding: at small xi (<=1.25) BSBF == FFS (share everything); at large xi
-BSBF avoids harmful pairs and wins by ~8-13%."""
+BSBF avoids harmful pairs and wins by ~8-13%. All (xi, policy) scenarios
+fan out as one parallel sweep."""
 from __future__ import annotations
 
-from repro.core import InterferenceModel, simulation_trace
+from repro.core.sweep import ScenarioSpec, run_sweep
 
-from .common import run_all_policies, save_json
+from .common import save_json
+
+XIS = (1.0, 1.25, 1.5, 1.75, 2.0)
+SHARING_POLICIES = ("sjf", "sjf-ffs", "sjf-bsbf")
 
 
-def run(verbose: bool = True):
+def run(verbose: bool = True, workers=None):
+    specs = [
+        ScenarioSpec(policy=p, n_jobs=240, global_xi=xi,
+                     n_servers=16, gpus_per_server=4, tag=f"xi={xi}")
+        for xi in XIS for p in SHARING_POLICIES
+    ]
+    rows = run_sweep(specs, workers=workers)
     payload = {}
-    for xi in (1.0, 1.25, 1.5, 1.75, 2.0):
-        jobs = simulation_trace(n_jobs=240)
-        interf = InterferenceModel(global_xi=xi)
-        results = run_all_policies(
-            jobs, n_servers=16, gpus_per_server=4,
-            policies=("sjf", "sjf-ffs", "sjf-bsbf"), interference=interf)
-        payload[f"xi={xi}"] = {p: r.summary()["avg_jct"]
-                               for p, r in results.items()}
-        if verbose:
-            row = payload[f"xi={xi}"]
-            gain = (row["sjf-ffs"] - row["sjf-bsbf"]) / row["sjf-ffs"] * 100
-            print(f"xi={xi}: sjf={row['sjf']:.0f}s ffs={row['sjf-ffs']:.0f}s "
-                  f"bsbf={row['sjf-bsbf']:.0f}s (bsbf vs ffs: {gain:+.1f}%)")
+    for row in rows:
+        payload.setdefault(row["tag"], {})[row["policy"]] = \
+            row["summary"]["avg_jct"]
+    if verbose:
+        for xi in XIS:
+            r = payload[f"xi={xi}"]
+            gain = (r["sjf-ffs"] - r["sjf-bsbf"]) / r["sjf-ffs"] * 100
+            print(f"xi={xi}: sjf={r['sjf']:.0f}s ffs={r['sjf-ffs']:.0f}s "
+                  f"bsbf={r['sjf-bsbf']:.0f}s (bsbf vs ffs: {gain:+.1f}%)")
     save_json("fig6b_xi.json", payload)
     return payload
 

@@ -1,0 +1,21 @@
+"""Frozen copy of the pre-refactor simulator core (seed commit 43415e0).
+
+This package exists ONLY as the "before" side of
+``benchmarks/sim_throughput.py``: it preserves the original per-event
+``min()``-scan event loop, the full-rescan interference refresh, and the
+original (cache-free) scheduler implementations, so before/after
+events-per-second numbers compare against what the code actually did
+before the event-heap engine landed — not against a baseline that
+silently inherits the new caches. Do not import it from ``src/``; do
+not "fix" or optimize it. See DESIGN.md §9.
+"""
+from .interference import paper_interference_model
+from .job import ClusterState
+from .schedulers import ALL_POLICIES, make_scheduler
+from .simulator import SimResults, Simulator
+from .trace import simulation_trace
+
+__all__ = [
+    "ALL_POLICIES", "ClusterState", "SimResults", "Simulator",
+    "make_scheduler", "paper_interference_model", "simulation_trace",
+]

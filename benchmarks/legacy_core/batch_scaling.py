@@ -49,31 +49,20 @@ def best_sharing_config(
     """Algorithm 2. ``running`` keeps its current sub-batch (the paper does
     not re-tune the running job); only the new job's b is swept."""
     run_mem = running.perf.mem_bytes(running.sub_batch)
-    t_run = running.solo_t_iter
-    rem_run = running.remaining_iters
-    # xi is independent of the candidate sub-batch under a global override
-    # or a two-way pair-table hit; only the structural fallback needs the
-    # per-candidate timing/memory arguments.
-    fixed_xi = interference.pair_fixed(running.model, new.model)
     best: Optional[SharingConfig] = None
 
     for b in candidate_sub_batches(new.batch):
         s = max(1, int(round(new.batch / b)))
-        new_mem = new.perf.mem_bytes(b)
-        if new_mem + run_mem > gpu_capacity_bytes:
+        if not new.perf.fits(b, gpu_capacity_bytes, other_mem=run_mem):
             continue  # pair does not fit device memory at this sub-batch
-        t_new = new.t_iter_accum(s)
-        if fixed_xi is not None:
-            xi_run, xi_new = fixed_xi
-        else:
-            mem_frac = (run_mem + new_mem) / gpu_capacity_bytes
-            xi_run = interference.xi(
-                running.model, new.model,
-                t_me=t_run, t_other=t_new, mem_frac=mem_frac)
-            xi_new = interference.xi(
-                new.model, running.model,
-                t_me=t_new, t_other=t_run, mem_frac=mem_frac)
-        a = PairJob(t_iter=t_run, iters=rem_run, xi=xi_run)
+        t_new = new.perf.t_iter(new.batch, s)
+        t_run = running.perf.t_iter(running.batch, running.accum_steps)
+        mem_frac = (run_mem + new.perf.mem_bytes(b)) / gpu_capacity_bytes
+        xi_run = interference.xi(running.model, new.model,
+                                 t_me=t_run, t_other=t_new, mem_frac=mem_frac)
+        xi_new = interference.xi(new.model, running.model,
+                                 t_me=t_new, t_other=t_run, mem_frac=mem_frac)
+        a = PairJob(t_iter=t_run, iters=running.remaining_iters, xi=xi_run)
         bb = PairJob(t_iter=t_new, iters=new.iters, xi=xi_new)
         dec = best_pair_schedule(a, bb)
         cfg = SharingConfig(
@@ -82,13 +71,6 @@ def best_sharing_config(
         )
         if best is None or cfg.avg_jct < best.avg_jct:
             best = cfg
-        if fixed_xi is not None:
-            # With b-independent xi the pair-average JCT is monotone
-            # nondecreasing as the sub-batch shrinks (t_iter(B, s) grows
-            # with s and both Theorem-1 endpoints grow with the new
-            # job's iteration time), so the first (largest) feasible
-            # sub-batch is optimal — same winner as the full sweep.
-            break
 
     if best is None:
         # No sub-batch fits next to the running job -> cannot share.

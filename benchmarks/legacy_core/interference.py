@@ -38,21 +38,6 @@ class InterferenceModel:
         self.table[(a, b)] = (xi_a, xi_b)
         self.table[(b, a)] = (xi_b, xi_a)
 
-    def pair_fixed(self, me: str, other: str) -> Optional[Tuple[float, float]]:
-        """(xi_me, xi_other) when both directions are independent of
-        timing/memory — a global override or a two-way table hit — so
-        callers sweeping sub-batches can hoist the lookup out of the
-        loop. None when the structural model applies to either side."""
-        if self.global_xi is not None:
-            return self.global_xi, self.global_xi
-        a = self.table.get((me, other))
-        if a is None:
-            return None
-        b = self.table.get((other, me))
-        if b is None:
-            return None
-        return a[0], b[0]
-
     def xi(
         self,
         me: str,

@@ -43,15 +43,6 @@ class Job:
     attained_service: float = 0.0   # gpus * seconds (Tiresias)
     alloc_gpus: Optional[int] = None  # elastic allocation (Pollux-like only)
     waiting_time: float = 0.0       # total time not holding GPUs (queue + preempted)
-    # memos: solo_t_iter keyed by accum_steps, and t_iter keyed by the
-    # candidate accumulation count (scheduler sort keys and Algorithm-2
-    # sub-batch sweeps hit these millions of times on large traces)
-    _t_iter_memo: Optional[tuple] = field(
-        default=None, repr=False, compare=False)
-    _t_iter_by_s: Dict[int, float] = field(
-        default_factory=dict, repr=False, compare=False)
-    _ert_memo: Optional[tuple] = field(
-        default=None, repr=False, compare=False)
 
     def __post_init__(self) -> None:
         if self.sub_batch == 0:
@@ -60,12 +51,7 @@ class Job:
     # ------------------------------------------------------------------ #
     @property
     def solo_t_iter(self) -> float:
-        memo = self._t_iter_memo
-        if memo is not None and memo[0] == self.accum_steps:
-            return memo[1]
-        val = self.perf.t_iter(self.batch, self.accum_steps)
-        self._t_iter_memo = (self.accum_steps, val)
-        return val
+        return self.perf.t_iter(self.batch, self.accum_steps)
 
     def base_t_iter(self) -> float:
         """Iteration time in *user iterations* given the current elastic
@@ -87,17 +73,7 @@ class Job:
 
     def t_iter_at(self, sub_batch: int) -> float:
         s = max(1, int(round(self.batch / max(1, sub_batch))))
-        return self.t_iter_accum(s)
-
-    def t_iter_accum(self, accum_steps: int) -> float:
-        """Memoized ``perf.t_iter(batch, accum_steps)`` — the Algorithm-2
-        sweep re-evaluates the same handful of accumulation counts for a
-        job on every scheduling pass."""
-        val = self._t_iter_by_s.get(accum_steps)
-        if val is None:
-            val = self.perf.t_iter(self.batch, accum_steps)
-            self._t_iter_by_s[accum_steps] = val
-        return val
+        return self.perf.t_iter(self.batch, s)
 
     @property
     def remaining_iters(self) -> float:
@@ -105,17 +81,8 @@ class Job:
 
     @property
     def expected_remaining_time(self) -> float:
-        """L_k = t_iter * remaining iterations (solo estimate, used by
-        SJF). Memoized on (iters_done, accum_steps): sort keys of queued
-        jobs are re-read every scheduling pass but only change when the
-        job actually progresses."""
-        memo = self._ert_memo
-        if (memo is not None and memo[0] == self.iters_done
-                and memo[1] == self.accum_steps):
-            return memo[2]
-        val = self.solo_t_iter * self.remaining_iters
-        self._ert_memo = (self.iters_done, self.accum_steps, val)
-        return val
+        """L_k = t_iter * remaining iterations (solo estimate, used by SJF)."""
+        return self.solo_t_iter * self.remaining_iters
 
     @property
     def service_size(self) -> float:
@@ -149,11 +116,6 @@ class ClusterState:
     gpu_capacity_bytes: float = 16 * 2**30
 
     occupancy: Dict[int, List[int]] = field(default_factory=dict)  # gpu -> [jid]
-    # occupancy-version caches for the per-scheduling-pass GPU scans;
-    # bumped on every allocate/release
-    _version: int = field(default=0, repr=False, compare=False)
-    _free_cache: tuple = field(default=(-1, None), repr=False, compare=False)
-    _single_cache: tuple = field(default=(-1, None), repr=False, compare=False)
 
     def __post_init__(self) -> None:
         for g in range(self.n_gpus):
@@ -168,21 +130,10 @@ class ClusterState:
 
     # ------------------------------------------------------------------ #
     def free_gpus(self) -> List[int]:
-        """GPUs with no tenant. Callers must treat the result as
-        read-only: it is cached until the next allocate/release."""
-        if self._free_cache[0] != self._version:
-            self._free_cache = (self._version, [
-                g for g in range(self.n_gpus) if not self.occupancy[g]])
-        return self._free_cache[1]
+        return [g for g in range(self.n_gpus) if not self.occupancy[g]]
 
     def single_occupancy_gpus(self) -> List[int]:
-        """GPUs with exactly one tenant (sharing candidates). Read-only;
-        cached until the next allocate/release."""
-        if self._single_cache[0] != self._version:
-            self._single_cache = (self._version, [
-                g for g in range(self.n_gpus)
-                if len(self.occupancy[g]) == 1])
-        return self._single_cache[1]
+        return [g for g in range(self.n_gpus) if len(self.occupancy[g]) == 1]
 
     def jobs_on(self, gpu: int) -> List[int]:
         return list(self.occupancy[gpu])
@@ -209,7 +160,6 @@ class ClusterState:
             if len(occ) >= self.max_jobs_per_gpu:
                 raise RuntimeError(f"GPU {g} already holds {occ}")
             occ.append(jid)
-        self._version += 1
 
     def release(self, jid: int, gpus: FrozenSet[int]) -> None:
         for g in gpus:
@@ -217,7 +167,6 @@ class ClusterState:
             if jid not in occ:
                 raise RuntimeError(f"GPU {g} does not hold job {jid}")
             occ.remove(jid)
-        self._version += 1
 
     def co_runners(self, job: Job) -> Set[int]:
         others: Set[int] = set()

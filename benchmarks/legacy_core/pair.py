@@ -86,10 +86,7 @@ def best_pair_schedule(a: PairJob, b: PairJob) -> PairDecision:
     (sequential) and return the better average-JCT decision."""
     t_a0, t_b0 = pair_timeline(a, b, 0.0)
     seq_kappa = a.solo_time
-    # sequential endpoint, closed form: A untouched, B queued behind it
-    # (identical to pair_timeline(a, b, seq_kappa), without the call)
-    t_a1 = seq_kappa
-    t_b1 = seq_kappa + b.solo_time
+    t_a1, t_b1 = pair_timeline(a, b, seq_kappa)
     avg0 = 0.5 * (t_a0 + t_b0)
     avg1 = 0.5 * (t_a1 + t_b1)
     if avg0 <= avg1:

@@ -13,7 +13,6 @@
 from __future__ import annotations
 
 import math
-from bisect import insort
 from typing import Dict, List, Optional, Tuple
 
 from .batch_scaling import best_sharing_config, candidate_sub_batches
@@ -40,77 +39,6 @@ def shared_sub_batch(job: Job, capacity: float, other_mem: float) -> Optional[in
     return None
 
 
-class _StaticOrder:
-    """Incrementally maintained sorted view over the scheduler's job
-    queue, for policies whose per-job sort key is *static* while the job
-    sits in that queue (non-preemptive SJF variants: a pending job's
-    remaining work is frozen; Tiresias/FIFO arrival order never
-    changes). Jobs are inserted once with their key via ``bisect``;
-    departed jobs are skipped lazily and only *terminal* (finished)
-    entries are compacted away. Produces exactly the order
-    ``sorted(queue, key)`` would (keys are tie-broken by jid, so
-    comparison never reaches the Job object).
-
-    A job re-entering the queue after a preemption may carry a changed
-    key; each entry therefore remembers the job's preemption count and
-    the view re-keys itself when they disagree. Policies whose key
-    cannot change across requeues (arrival order) pass
-    ``requeue_safe=True`` to skip that check."""
-
-    def __init__(self, key_fn, live_states=(JobState.PENDING,),
-                 requeue_safe=False):
-        self._key_fn = key_fn
-        self._live = live_states
-        self._requeue_safe = requeue_safe
-        self._entries: List[tuple] = []   # (key, jid, job, preemptions)
-        self._tracked: set = set()
-
-    def reset(self) -> None:
-        self._entries.clear()
-        self._tracked.clear()
-
-    def _rekey(self) -> List[tuple]:
-        key_fn = self._key_fn
-        alive = [e[2] for e in self._entries
-                 if e[2].state is not JobState.FINISHED]
-        self._entries = sorted(
-            (key_fn(j), j.jid, j, j.preemptions) for j in alive)
-        self._tracked = {j.jid for j in alive}
-        return self._entries
-
-    def order(self, *queues) -> List[Job]:
-        entries, tracked, key_fn = self._entries, self._tracked, self._key_fn
-        for queue in queues:
-            for job in queue:
-                jid = job.jid
-                if jid not in tracked:
-                    tracked.add(jid)
-                    insort(entries, (key_fn(job), jid, job,
-                                     job.preemptions))
-        live = self._live
-        if self._requeue_safe:
-            out = [e[2] for e in entries if e[2].state in live]
-        else:
-            out = []
-            for e in entries:
-                job = e[2]
-                if job.state in live:
-                    if job.preemptions != e[3]:
-                        # re-queued since insertion: key may be stale
-                        entries = self._rekey()
-                        out = [e[2] for e in entries
-                               if e[2].state in live]
-                        break
-                    out.append(job)
-        if 2 * len(out) < len(entries):
-            keep = [e for e in entries
-                    if e[2].state is not JobState.FINISHED]
-            if len(keep) < len(entries):
-                self._entries = keep
-                self._tracked = {e[1] for e in keep}
-        return out
-
-
 def _start_exclusive(sim: Simulator, job: Job) -> bool:
     free = sim.cluster.free_gpus()
     want = job.alloc_gpus or job.gpus
@@ -127,12 +55,9 @@ def _start_exclusive(sim: Simulator, job: Job) -> bool:
 # ---------------------------------------------------------------------- #
 class FIFO(SchedulerBase):
     name = "fifo"
-    reads_running_progress = False
 
     def schedule(self, sim: Simulator) -> None:
-        # pending is already in (arrival, jid) order: arrivals append in
-        # that order and nothing re-enters the queue
-        for job in list(sim.pending):
+        for job in sorted(sim.pending, key=lambda j: (j.arrival, j.jid)):
             if not _start_exclusive(sim, job):
                 break  # strict FIFO: head-of-line blocks the queue
 
@@ -143,16 +68,11 @@ class SJF(SchedulerBase):
     matching the queueing structure the paper reports for SJF)."""
 
     name = "sjf"
-    reads_running_progress = False
-
-    def __init__(self) -> None:
-        self._order = _StaticOrder(lambda j: j.expected_remaining_time)
-
-    def reset(self) -> None:
-        self._order.reset()
 
     def schedule(self, sim: Simulator) -> None:
-        for job in self._order.order(sim.pending):
+        order = sorted(sim.pending,
+                       key=lambda j: (j.expected_remaining_time, j.jid))
+        for job in order:
             if not _start_exclusive(sim, job):
                 break
 
@@ -168,25 +88,13 @@ class Tiresias(SchedulerBase):
                  tick_interval: float = 60.0) -> None:
         self.threshold = threshold_gpu_seconds
         self.tick_interval = tick_interval
-        self._active = _StaticOrder(
-            lambda j: (j.arrival, j.jid),
-            live_states=(JobState.PENDING, JobState.RUNNING),
-            requeue_safe=True)   # arrival order survives preemption
-
-    def reset(self) -> None:
-        self._active.reset()
 
     def schedule(self, sim: Simulator) -> None:
-        # every job enters via the pending queue, so tracking it is
-        # enough to enumerate all active jobs in (arrival, jid) order
-        active = self._active.order(sim.pending)
+        active: List[Job] = list(sim.running.values()) + list(sim.pending)
         if not active:
             return
-        # == sorted(active, key=(queue, arrival, jid)): the threshold
-        # partition preserves the static arrival order within each queue
-        thr = self.threshold
-        order = ([j for j in active if j.attained_service < thr]
-                 + [j for j in active if j.attained_service >= thr])
+        queue = lambda j: 0 if j.attained_service < self.threshold else 1
+        order = sorted(active, key=lambda j: (queue(j), j.arrival, j.jid))
         total = sim.cluster.n_gpus
         chosen: List[Job] = []
         cap = total
@@ -245,74 +153,25 @@ class PolluxLike(SchedulerBase):
     name = "pollux"
     preemptive = True
     tick_only = True   # real Pollux acts on a fixed optimization interval
-    reads_running_progress = False   # _rate() uses static perf fields only
 
     def __init__(self, tick_interval: float = 60.0,
                  min_gpus: int = 1) -> None:
         self.tick_interval = tick_interval
         self.min_gpus = min_gpus
-        self._rate_cache: Dict[Tuple[int, int, int], float] = {}
-        self._levels_cache: Dict[int, List[int]] = {}
-        # (jid, accum_steps, cur_level) -> (marginal gain, next level),
-        # or None when the job is already at its top level
-        self._gain_cache: Dict[Tuple[int, int, int], object] = {}
 
-    def reset(self) -> None:
-        self._rate_cache.clear()   # jids are only unique within one run
-        self._gain_cache.clear()
-
-    def _rate(self, job: Job, n: int) -> float:
-        """User-iterations/sec at allocation n (weak scaling). Memoized:
-        the greedy upgrade loop re-evaluates the same (job, n) points
-        thousands of times per tick on large traces."""
-        key = (job.jid, job.accum_steps, n)
-        cached = self._rate_cache.get(key)
-        if cached is not None:
-            return cached
+    @staticmethod
+    def _rate(job: Job, n: int) -> float:
+        """User-iterations/sec at allocation n (weak scaling)."""
         if n <= 0:
-            val = 0.0
-        else:
-            p = job.perf
-            sub = job.batch / job.accum_steps
-            tc = p.t_comp(sub)
-            tn = (p.alpha_comm * max(1, math.ceil(math.log2(max(2, n))))
-                  + p.beta_comm * 2.0 * p.param_bytes * (n - 1) / n)
-            d = p.delta
-            t_phys = ((job.accum_steps - 1) * tc
-                      + (tc ** d + tn ** d) ** (1 / d))
-            val = (n / job.gpus) / t_phys
-        self._rate_cache[key] = val
-        return val
-
-    def _levels(self, job: Job) -> List[int]:
-        levels = self._levels_cache.get(job.gpus)
-        if levels is None:
-            levels = [n for n in (1, 2, 4, 8, 12, 16, 24, 32)
-                      if n <= job.gpus] or [job.gpus]
-            self._levels_cache[job.gpus] = levels
-        return levels
-
-    def _gain(self, job: Job, cur: int):
-        """(marginal goodput gain, next level) above ``cur`` — pure in
-        (job, accum_steps, cur), so cached across upgrade rounds and
-        ticks; None when no higher level exists."""
-        key = (job.jid, job.accum_steps, cur)
-        try:
-            return self._gain_cache[key]
-        except KeyError:
-            pass
-        nxt = None
-        for n in self._levels(job):
-            if n > cur:
-                nxt = n
-                break
-        if nxt is None:
-            val = None
-        else:
-            val = ((self._rate(job, nxt) - self._rate(job, cur))
-                   / (nxt - cur), nxt)
-        self._gain_cache[key] = val
-        return val
+            return 0.0
+        p = job.perf
+        sub = job.batch / job.accum_steps
+        tc = p.t_comp(sub)
+        tn = (p.alpha_comm * max(1, math.ceil(math.log2(max(2, n))))
+              + p.beta_comm * 2.0 * p.param_bytes * (n - 1) / n)
+        d = p.delta
+        t_phys = (job.accum_steps - 1) * tc + (tc ** d + tn ** d) ** (1 / d)
+        return (n / job.gpus) / t_phys
 
     def schedule(self, sim: Simulator) -> None:
         active: List[Job] = list(sim.running.values()) + list(sim.pending)
@@ -323,7 +182,8 @@ class PolluxLike(SchedulerBase):
         # goodput *subject to fairness*; fair shares, then goodput-aware
         # upgrades for whoever is furthest below its request).
         alloc: Dict[int, int] = {j.jid: 0 for j in active}
-        levels = self._levels
+        levels = lambda j: [n for n in (1, 2, 4, 8, 12, 16, 24, 32)
+                            if n <= j.gpus] or [j.gpus]
         budget = total
         order = sorted(active, key=lambda j: (j.arrival, j.jid))
         for j in order:
@@ -331,33 +191,26 @@ class PolluxLike(SchedulerBase):
             if budget >= first:
                 alloc[j.jid] = first
                 budget -= first
-        # Greedy upgrades: furthest below fair share first; break ties by
-        # marginal rate, then jid (same selection as sorting all
-        # candidates and taking the head). A job whose next level does
-        # not exist or exceeds the remaining budget can never become
-        # upgradeable again this tick (budget only shrinks and its
-        # allocation is frozen until upgraded), so it is pruned from the
-        # scan instead of being re-evaluated every round.
-        gain_of = self._gain
-        live = [j for j in active if alloc[j.jid] > 0]
-        while budget > 0 and live:
-            best = None
-            still = []
-            for j in live:
+        upgraded = True
+        while upgraded and budget > 0:
+            upgraded = False
+            # furthest below fair share first; break ties by marginal rate
+            cands = []
+            for j in active:
                 cur = alloc[j.jid]
-                g = gain_of(j, cur)
-                if g is None or g[1] - cur > budget:
+                if cur == 0:
                     continue
-                still.append(j)
-                key = (cur / j.gpus, -g[0], j.jid)
-                if best is None or key < best[0]:
-                    best = (key, j, g[1])
-            live = still
-            if best is None:
-                break
-            _, j, nxt = best
-            budget -= nxt - alloc[j.jid]
-            alloc[j.jid] = nxt
+                nxt = next((n for n in levels(j) if n > cur), None)
+                if nxt is None or nxt - cur > budget:
+                    continue
+                gain = (self._rate(j, nxt) - self._rate(j, cur)) / (nxt - cur)
+                cands.append((cur / j.gpus, -gain, j.jid, j, nxt))
+            if cands:
+                cands.sort()
+                _, _, _, j, nxt = cands[0]
+                budget -= nxt - alloc[j.jid]
+                alloc[j.jid] = nxt
+                upgraded = True
 
         # Apply: preempt mismatched running jobs, then start.
         for j in list(sim.running.values()):
@@ -383,17 +236,12 @@ class SJF_FFS(SchedulerBase):
     comparison baseline showing that *wise* sharing matters."""
 
     name = "sjf-ffs"
-    reads_running_progress = False   # pairs on static mem/perf fields only
-
-    def __init__(self) -> None:
-        self._order = _StaticOrder(lambda j: j.expected_remaining_time)
-
-    def reset(self) -> None:
-        self._order.reset()
 
     def schedule(self, sim: Simulator) -> None:
         cap = sim.cluster.gpu_capacity_bytes
-        for job in self._order.order(sim.pending):
+        order = sorted(sim.pending,
+                       key=lambda j: (j.expected_remaining_time, j.jid))
+        for job in order:
             if _start_exclusive(sim, job):
                 continue
             free = sim.cluster.free_gpus()
@@ -425,15 +273,11 @@ class SJF_BSBF(SchedulerBase):
 
     name = "sjf-bsbf"
 
-    def __init__(self) -> None:
-        self._order = _StaticOrder(lambda j: j.expected_remaining_time)
-
-    def reset(self) -> None:
-        self._order.reset()
-
     def schedule(self, sim: Simulator) -> None:
         cap = sim.cluster.gpu_capacity_bytes
-        for job in self._order.order(sim.pending):
+        order = sorted(sim.pending,
+                       key=lambda j: (j.expected_remaining_time, j.jid))
+        for job in order:
             # Lines 6-8: enough free GPUs -> exclusive consolidated pick.
             if _start_exclusive(sim, job):
                 continue

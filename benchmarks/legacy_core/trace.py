@@ -1,0 +1,116 @@
+"""Workload generation following the Microsoft/Philly trace shape used by
+the paper (Section VI-A): GPU-demand and iteration-count distributions,
+Poisson arrivals, model mix over the six Pollux tasks (paper-faithful) or
+the ten assigned architectures (TPU-cluster mode)."""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+from .job import Job
+from .perf_model import GPU_2080TI, HardwareSpec
+from .tasks import PAPER_TASK_PROFILES, TaskProfile
+
+
+@dataclass(frozen=True)
+class TraceConfig:
+    n_jobs: int = 240
+    seed: int = 0
+    mean_interarrival: float = 90.0          # Poisson arrivals (s)
+    # Philly-like GPU demand distribution (paper: >4 GPUs == "large")
+    gpu_demand: Sequence[tuple[int, float]] = (
+        (1, 0.30), (2, 0.20), (4, 0.20), (8, 0.15), (12, 0.05), (16, 0.10))
+    min_iters: int = 100
+    max_iters: int = 5000
+    log_uniform_iters: bool = True
+    tasks: Optional[Dict[str, TaskProfile]] = None
+    hw: HardwareSpec = GPU_2080TI
+    task_weights: Optional[Dict[str, float]] = None
+
+
+def _sample_iters(rng: random.Random, cfg: TraceConfig) -> int:
+    if cfg.log_uniform_iters:
+        import math
+        lo, hi = math.log(cfg.min_iters), math.log(cfg.max_iters)
+        return int(round(math.exp(rng.uniform(lo, hi))))
+    return rng.randint(cfg.min_iters, cfg.max_iters)
+
+
+def _sample_gpus(rng: random.Random, cfg: TraceConfig) -> int:
+    r = rng.random()
+    acc = 0.0
+    for gpus, p in cfg.gpu_demand:
+        acc += p
+        if r <= acc:
+            return gpus
+    return cfg.gpu_demand[-1][0]
+
+
+def generate_trace(cfg: TraceConfig) -> List[Job]:
+    rng = random.Random(cfg.seed)
+    tasks = cfg.tasks or PAPER_TASK_PROFILES
+    names = sorted(tasks)
+    weights = ([cfg.task_weights.get(n, 1.0) for n in names]
+               if cfg.task_weights else None)
+    jobs: List[Job] = []
+    t = 0.0
+    for jid in range(cfg.n_jobs):
+        t += rng.expovariate(1.0 / cfg.mean_interarrival)
+        name = rng.choices(names, weights=weights)[0]
+        prof = tasks[name]
+        gpus = _sample_gpus(rng, cfg)
+        jobs.append(Job(
+            jid=jid,
+            model=name,
+            arrival=t,
+            gpus=gpus,
+            iters=float(_sample_iters(rng, cfg)),
+            batch=prof.default_batch,
+            perf=prof.perf_params(gpus, cfg.hw),
+        ))
+    return jobs
+
+
+def physical_trace(seed: int = 0) -> List[Job]:
+    """The 30-job scaled-down trace of the physical 16-GPU experiment:
+    20 jobs with <= 8 GPUs, 10 jobs with 12 or 16 GPUs, iterations in
+    [100, 5000] (Section VI-A)."""
+    rng = random.Random(seed)
+    jobs: List[Job] = []
+    t = 0.0
+    specs = [rng.choice([1, 2, 4, 8]) for _ in range(20)] + \
+            [rng.choice([12, 16]) for _ in range(10)]
+    rng.shuffle(specs)
+    names = sorted(PAPER_TASK_PROFILES)
+    for jid, gpus in enumerate(specs):
+        t += rng.expovariate(1.0 / 30.0)
+        name = rng.choice(names)
+        prof = PAPER_TASK_PROFILES[name]
+        import math
+        iters = int(round(math.exp(rng.uniform(math.log(100),
+                                               math.log(5000)))))
+        jobs.append(Job(
+            jid=jid, model=name, arrival=t, gpus=gpus, iters=float(iters),
+            batch=prof.default_batch,
+            perf=prof.perf_params(gpus, GPU_2080TI),
+        ))
+    return jobs
+
+
+def simulation_trace(n_jobs: int = 240, seed: int = 0,
+                     load_scale: float = 1.0,
+                     tasks: Optional[Dict[str, TaskProfile]] = None,
+                     hw: HardwareSpec = GPU_2080TI) -> List[Job]:
+    """The 240/480-job simulation workloads (Tables III/IV); ``load_scale``
+    compresses/stretches interarrival times for the Fig. 6a sweep."""
+    cfg = TraceConfig(
+        n_jobs=n_jobs,
+        seed=seed,
+        mean_interarrival=90.0 / max(load_scale, 1e-9),
+        max_iters=20000,
+        min_iters=200,
+        tasks=tasks,
+        hw=hw,
+    )
+    return generate_trace(cfg)

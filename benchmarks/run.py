@@ -17,7 +17,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from . import (fig4_fig5_jct_queue, fig6a_load, fig6b_xi, roofline,
-                   table2_physical, table3_240, table4_480, xi_calibration)
+                   sim_throughput, table2_physical, table3_240, table4_480,
+                   xi_calibration)
 
     stages = [
         ("table2_physical (Table II)", table2_physical.run),
@@ -30,6 +31,8 @@ def main(argv=None) -> int:
         stages.insert(2, ("table4_480 (Table IV)", table4_480.run))
         stages.append(("xi_calibration (co-schedule testbed)",
                        xi_calibration.run))
+        stages.append(("sim_throughput (engine before/after)",
+                       sim_throughput.run))
     stages.append(("roofline (§Roofline from dry-run)", roofline.run))
 
     failures = 0

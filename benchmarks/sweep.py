@@ -1,0 +1,97 @@
+"""Parallel scenario-sweep CLI — fan policy x load x seed grids across
+worker processes and aggregate `SimResults.summary()` rows to JSON/CSV.
+
+    PYTHONPATH=src python -m benchmarks.sweep --policies sjf,sjf_bsbf --jobs 40
+    PYTHONPATH=src python -m benchmarks.sweep --policies all --jobs 240 \
+        --loads 0.5,1.0,1.5,2.0 --seeds 0,1,2 --workers 8 --out load_sweep
+
+Scenario seeding is deterministic: each worker rebuilds its trace from
+the spec fields alone, so aggregate output is byte-identical for any
+worker count (see repro.core.sweep / DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+from repro.core.sweep import (ScenarioSpec, grid, normalize_policy,
+                              run_sweep, summary_table, write_csv,
+                              write_json)
+
+from .common import ARTIFACTS, POLICIES
+
+
+def _floats(text: str):
+    return tuple(float(x) for x in text.split(",") if x)
+
+
+def _ints(text: str):
+    return tuple(int(x) for x in text.split(",") if x)
+
+
+def build_specs(args) -> list:
+    policies = (POLICIES if args.policies == "all"
+                else tuple(normalize_policy(p)
+                           for p in args.policies.split(",") if p))
+    common = dict(
+        n_jobs=args.jobs,
+        trace=args.trace,
+        n_servers=args.servers,
+        gpus_per_server=args.gpus_per_server,
+        capacity_gb=args.capacity_gb,
+        global_xi=args.xi,
+        engine=args.engine,
+    )
+    return grid(policies, seeds=_ints(args.seeds),
+                loads=_floats(args.loads), **common)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--policies", default="all",
+                    help="comma list (sjf,sjf-bsbf,... — underscores ok) "
+                         "or 'all'")
+    ap.add_argument("--jobs", type=int, default=240)
+    ap.add_argument("--loads", default="1.0", help="comma list of load "
+                    "scales (Fig. 6a style interarrival compression)")
+    ap.add_argument("--seeds", default="0", help="comma list of trace seeds")
+    ap.add_argument("--trace", choices=("simulation", "physical"),
+                    default="simulation")
+    ap.add_argument("--servers", type=int, default=16)
+    ap.add_argument("--gpus-per-server", type=int, default=4)
+    ap.add_argument("--capacity-gb", type=float, default=11.0)
+    ap.add_argument("--xi", type=float, default=None,
+                    help="inject a global interference ratio (Fig. 6b)")
+    ap.add_argument("--engine", choices=("heap", "scan"), default=None,
+                    help="simulator engine (default: REPRO_SIM_ENGINE "
+                         "env, else heap)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="worker processes (default: min(scenarios, CPUs))")
+    ap.add_argument("--out", default="sweep",
+                    help="artifact basename (writes <out>.json + <out>.csv)")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    specs = build_specs(args)
+    if not specs:
+        ap.error("no scenarios selected (check --policies/--seeds/--loads)")
+    t0 = time.time()
+    rows = run_sweep(specs, workers=args.workers)
+    wall = time.time() - t0
+
+    if not args.quiet:
+        print(summary_table(
+            rows, f"sweep: {len(rows)} scenarios in {wall:.1f}s "
+                  f"(jobs={args.jobs}, trace={args.trace})"))
+    json_path = write_json(rows, os.path.join(ARTIFACTS, args.out + ".json"))
+    csv_path = write_csv(rows, os.path.join(ARTIFACTS, args.out + ".csv"))
+    if not args.quiet:
+        sim_time = sum(r["wall_seconds"] for r in rows)
+        print(f"wrote {json_path} and {csv_path} "
+              f"({sim_time:.1f}s of simulation in {wall:.1f}s wall)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,19 +1,21 @@
 """Table III — 240-job simulation on the 64-GPU cluster (16 servers x 4):
-average JCT and queueing for all/large/small jobs per policy."""
+average JCT and queueing for all/large/small jobs per policy. The
+policies fan out across worker processes via repro.core.sweep."""
 from __future__ import annotations
 
-from repro.core import simulation_trace
+from repro.core.sweep import grid, rows_by_policy, run_sweep
 
-from .common import run_all_policies, save_json, summaries, table
+from .common import POLICIES, policy_table, save_json
 
 
 def run(n_jobs: int = 240, seed: int = 0, verbose: bool = True,
-        name: str = "table3_240"):
-    jobs = simulation_trace(n_jobs=n_jobs, seed=seed)
-    results = run_all_policies(jobs, n_servers=16, gpus_per_server=4)
+        name: str = "table3_240", workers=None):
+    specs = grid(POLICIES, seeds=(seed,), n_jobs=n_jobs,
+                 n_servers=16, gpus_per_server=4)
+    rows = run_sweep(specs, workers=workers)
+    payload = rows_by_policy(rows)
     if verbose:
-        print(table(results, f"Table ({n_jobs} jobs, 16x4 GPUs)"))
-    payload = summaries(results)
+        print(policy_table(payload, f"Table ({n_jobs} jobs, 16x4 GPUs)"))
     save_json(f"{name}.json", payload)
     s = payload
     if verbose:

@@ -5,9 +5,9 @@ from __future__ import annotations
 from .table3_240 import run as run_240
 
 
-def run(seed: int = 0, verbose: bool = True):
+def run(seed: int = 0, verbose: bool = True, workers=None):
     return run_240(n_jobs=480, seed=seed, verbose=verbose,
-                   name="table4_480")
+                   name="table4_480", workers=workers)
 
 
 if __name__ == "__main__":

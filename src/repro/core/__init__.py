@@ -7,20 +7,27 @@ from .pair import PairDecision, PairJob, best_pair_schedule, pair_timeline
 from .perf_model import (GPU_2080TI, TPU_V5E, HardwareSpec, PerfParams,
                          derive_perf_params, fit_comp_params, infer_xi,
                          ring_allreduce_bytes)
+from .engine import ENGINES, HeapEngine, ScanEngine
 from .schedulers import (ALL_POLICIES, FIFO, SJF, SJF_BSBF, SJF_FFS, SRSF,
                          PolluxLike, Tiresias, make_scheduler)
 from .simulator import SchedulerBase, SimResults, Simulator
+from .sweep import (ScenarioSpec, grid, run_scenario, run_sweep,
+                    rows_by_policy, summary_table, write_csv, write_json)
 from .tasks import PAPER_TASK_PROFILES, TaskProfile, profile_from_arch
 from .trace import TraceConfig, generate_trace, physical_trace, simulation_trace
 
 __all__ = [
-    "ALL_POLICIES", "ClusterState", "FIFO", "GPU_2080TI", "HardwareSpec",
-    "InterferenceModel", "Job", "JobState", "PAPER_TASK_PROFILES",
+    "ALL_POLICIES", "ClusterState", "ENGINES", "FIFO", "GPU_2080TI",
+    "HardwareSpec", "HeapEngine", "InterferenceModel", "Job", "JobState",
+    "PAPER_TASK_PROFILES",
     "PairDecision", "PairJob", "PerfParams", "PolluxLike", "SJF", "SJF_BSBF", "SRSF",
-    "SJF_FFS", "SchedulerBase", "SharingConfig", "SimResults", "Simulator",
+    "SJF_FFS", "ScanEngine", "ScenarioSpec", "SchedulerBase",
+    "SharingConfig", "SimResults", "Simulator",
     "TPU_V5E", "TaskProfile", "Tiresias", "TraceConfig",
     "best_pair_schedule", "best_sharing_config", "derive_perf_params",
-    "fit_comp_params", "generate_trace", "infer_xi", "make_scheduler",
+    "fit_comp_params", "generate_trace", "grid", "infer_xi", "make_scheduler",
     "pair_timeline", "paper_interference_model", "physical_trace",
-    "profile_from_arch", "ring_allreduce_bytes", "simulation_trace",
+    "profile_from_arch", "ring_allreduce_bytes", "rows_by_policy",
+    "run_scenario", "run_sweep", "simulation_trace", "summary_table",
+    "write_csv", "write_json",
 ]

@@ -1,0 +1,523 @@
+"""Discrete-event engines behind :class:`repro.core.Simulator` (DESIGN.md §9).
+
+The simulator core originally recomputed the next event time with a
+linear ``min()`` scan over every running job on every event, and
+refreshed every job's interference rate after every scheduling pass even
+when nothing on its GPUs changed — an O(events x running x co-runners)
+wall that dominates at datacenter trace sizes (the Philly/Helios regime).
+Two engines now implement the same observable semantics:
+
+* :class:`ScanEngine` — the pre-refactor reference, kept verbatim for
+  equivalence testing (``tests/test_engine_equivalence.py``) and for the
+  before/after microbench (``benchmarks/sim_throughput.py``).
+
+* :class:`HeapEngine` — the default. An indexed binary heap of predicted
+  finish events with lazy invalidation (per-job sequence numbers; stale
+  entries are discarded on pop), a *dirty set* of jobs whose GPU
+  co-runner sets actually changed (propagated from ``start_job`` /
+  ``preempt_job`` / release-on-finish) so interference rates are only
+  recomputed for those, and lazy progress/waiting accrual so events cost
+  O(log running + |dirty|) instead of O(running x co-runners).
+
+Both engines own the event clock, the pending/running queues, and the
+progress accounting; the policy-facing :class:`repro.core.Simulator`
+facade proxies its attributes here so schedulers keep their API.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+from .job import Job, JobState
+
+_EPS = 1e-9
+
+# A job is complete when its remaining iterations drop below this
+# fraction of its total (guards float drift near the finish time).
+_FINISH_TOL = 1e-6
+
+
+@dataclass
+class SimResults:
+    jobs: List[Job]
+    makespan: float
+    events: int
+    name: str = ""
+
+    # ------------------------------------------------------------------ #
+    def _sel(self, large: Optional[bool]) -> List[Job]:
+        if large is None:
+            return self.jobs
+        return [j for j in self.jobs if (j.gpus > 4) == large]
+
+    def avg_jct(self, large: Optional[bool] = None) -> float:
+        sel = self._sel(large)
+        return sum(j.jct() for j in sel) / len(sel) if sel else 0.0
+
+    def avg_queueing(self, large: Optional[bool] = None) -> float:
+        sel = self._sel(large)
+        return sum(j.queueing_delay() for j in sel) / len(sel) if sel else 0.0
+
+    def jct_list(self) -> List[float]:
+        return sorted(j.jct() for j in self.jobs)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "makespan": self.makespan,
+            "avg_jct": self.avg_jct(),
+            "avg_jct_large": self.avg_jct(True),
+            "avg_jct_small": self.avg_jct(False),
+            "avg_queue": self.avg_queueing(),
+            "avg_queue_large": self.avg_queueing(True),
+            "avg_queue_small": self.avg_queueing(False),
+        }
+
+
+class EngineBase:
+    """Event clock, queues, and progress accounting shared by both engines.
+
+    The constructor pulls its configuration from the owning
+    :class:`repro.core.Simulator`; schedulers never see the engine —
+    they interact with the facade, which proxies to it.
+    """
+
+    name = "base"
+
+    def __init__(self, sim) -> None:
+        self.sim = sim
+        self.cluster = sim.cluster
+        self.jobs: Dict[int, Job] = sim.jobs
+        self.arrivals: List[Job] = sim.arrivals
+        self.scheduler = sim.scheduler
+        self.interference = sim.interference
+        self.restart_penalty = sim.restart_penalty
+        self.max_events = sim.max_events
+
+        self.time = 0.0
+        self.pending: List[Job] = []
+        self.running: Dict[int, Job] = {}
+        self._arrival_idx = 0
+        self._blocked_until: Dict[int, float] = {}
+        self._next_tick = (self.scheduler.tick_interval
+                           if self.scheduler.tick_interval else None)
+        self._events = 0
+        self.log: List[tuple] = []
+
+    # ------------------------------------------------------------------ #
+    # Policy-facing mutations (invoked through the Simulator facade)
+    # ------------------------------------------------------------------ #
+    def start_job(self, job: Job, gpus: Sequence[int],
+                  sub_batch: Optional[int] = None) -> None:
+        if job.state == JobState.RUNNING:
+            raise RuntimeError(f"job {job.jid} already running")
+        gset = frozenset(gpus)
+        want = job.alloc_gpus or job.gpus
+        if len(gset) != want:
+            raise RuntimeError(
+                f"job {job.jid} needs {want} GPUs, got {len(gset)}")
+        self.cluster.allocate(job.jid, gset)
+        job.placement = gset
+        if sub_batch is not None:
+            job.sub_batch = int(sub_batch)
+            job.accum_steps = max(1, int(round(job.batch / job.sub_batch)))
+        job.state = JobState.RUNNING
+        job.start_time = self.time
+        if job.first_start_time is None:
+            job.first_start_time = self.time
+        job.last_progress_at = self.time
+        penalty = self.restart_penalty if job.preemptions > 0 else 0.0
+        self._blocked_until[job.jid] = self.time + penalty
+        self.running[job.jid] = job
+        self._drop_pending(job)
+        self._on_start(job)
+        self.log.append((self.time, "start", job.jid, sorted(gset)))
+
+    def preempt_job(self, job: Job) -> None:
+        if job.state != JobState.RUNNING:
+            raise RuntimeError(f"job {job.jid} not running")
+        self._accrue(job, self.time)
+        self._on_preempt(job)
+        self.cluster.release(job.jid, job.placement)
+        job.placement = frozenset()
+        job.state = JobState.PENDING
+        job.preemptions += 1
+        job.current_rate = 0.0
+        del self.running[job.jid]
+        self._blocked_until.pop(job.jid, None)
+        self.pending.append(job)
+        self._on_requeued(job)
+        self.log.append((self.time, "preempt", job.jid))
+
+    # Engine-specific bookkeeping hooks -------------------------------- #
+    def _drop_pending(self, job: Job) -> None:
+        if job in self.pending:
+            self.pending.remove(job)
+
+    def _on_start(self, job: Job) -> None:
+        pass
+
+    def _on_preempt(self, job: Job) -> None:
+        """Called while ``job`` still holds its GPUs (before release)."""
+
+    def _on_requeued(self, job: Job) -> None:
+        pass
+
+    # ------------------------------------------------------------------ #
+    # Progress accounting
+    # ------------------------------------------------------------------ #
+    def effective_t_iter(self, job: Job) -> float:
+        base = job.base_t_iter()
+        xi = 1.0
+        for other_id in self.cluster.co_runners(job):
+            other = self.jobs[other_id]
+            mem = (job.perf.mem_bytes(job.sub_batch)
+                   + other.perf.mem_bytes(other.sub_batch))
+            xi = max(xi, self.interference.xi(
+                job.model, other.model,
+                t_me=base,
+                t_other=other.solo_t_iter,
+                mem_frac=mem / self.cluster.gpu_capacity_bytes))
+        return base * xi
+
+    def _accrue(self, job: Job, now: float) -> None:
+        blocked_until = self._blocked_until.get(job.jid, 0.0)
+        begin = max(job.last_progress_at, blocked_until)
+        if now > begin and job.current_rate > 0:
+            job.iters_done = min(
+                job.iters, job.iters_done + (now - begin) * job.current_rate)
+        if now > job.last_progress_at:
+            job.attained_service += job.gpus * (now - job.last_progress_at)
+            # time stalled on restart/migration counts as queueing delay
+            stalled = min(now, blocked_until) - job.last_progress_at
+            if stalled > 0:
+                job.waiting_time += stalled
+        job.last_progress_at = now
+
+    def _predicted_finish(self, job: Job) -> float:
+        if job.current_rate <= 0:
+            return math.inf
+        begin = max(self.time, self._blocked_until.get(job.jid, 0.0))
+        return begin + job.remaining_iters / job.current_rate
+
+    def _results(self) -> SimResults:
+        makespan = max(j.finish_time for j in self.jobs.values())
+        return SimResults(jobs=list(self.jobs.values()), makespan=makespan,
+                          events=self._events, name=self.scheduler.name)
+
+    def run(self) -> SimResults:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------- #
+class ScanEngine(EngineBase):
+    """The pre-refactor event loop: every event re-derives the next event
+    time with a ``min()`` over all running jobs and refreshes every
+    running job's rate. O(running x co-runners) per event; kept as the
+    reference implementation."""
+
+    name = "scan"
+
+    def effective_t_iter(self, job: Job) -> float:
+        # Verbatim pre-refactor body (no solo_t_iter memo on the
+        # co-runner lookup): this engine is the frozen "before" the
+        # microbench compares against.
+        base = job.base_t_iter()
+        xi = 1.0
+        for other_id in self.cluster.co_runners(job):
+            other = self.jobs[other_id]
+            mem = (job.perf.mem_bytes(job.sub_batch)
+                   + other.perf.mem_bytes(other.sub_batch))
+            xi = max(xi, self.interference.xi(
+                job.model, other.model,
+                t_me=base,
+                t_other=other.perf.t_iter(other.batch, other.accum_steps),
+                mem_frac=mem / self.cluster.gpu_capacity_bytes))
+        return base * xi
+
+    def _refresh_rates(self) -> None:
+        for job in self.running.values():
+            job.current_rate = 1.0 / self.effective_t_iter(job)
+
+    def run(self) -> SimResults:
+        finished = 0
+        total = len(self.jobs)
+        self.scheduler.reset()
+        self._refresh_rates()
+        while finished < total:
+            self._events += 1
+            if self._events > self.max_events:
+                raise RuntimeError(
+                    f"simulator exceeded {self.max_events} events "
+                    f"({finished}/{total} finished at t={self.time:.1f}; "
+                    f"pending={len(self.pending)})")
+            # -- next event time ---------------------------------------
+            candidates: List[float] = []
+            if self._arrival_idx < len(self.arrivals):
+                candidates.append(self.arrivals[self._arrival_idx].arrival)
+            for job in self.running.values():
+                candidates.append(self._predicted_finish(job))
+            if self._next_tick is not None:
+                candidates.append(self._next_tick)
+            if not candidates:
+                raise RuntimeError(
+                    f"deadlock: {len(self.pending)} pending jobs, none "
+                    f"running, no arrivals left (t={self.time:.1f})")
+            t_next = min(candidates)
+            if t_next < self.time - _EPS:
+                raise RuntimeError("time went backwards")
+            t_next = max(t_next, self.time)
+
+            # -- advance all running jobs to t_next --------------------
+            for job in list(self.running.values()):
+                self._accrue(job, t_next)
+            for job in self.pending:
+                job.waiting_time += t_next - self.time
+            self.time = t_next
+
+            # -- completions -------------------------------------------
+            for job in list(self.running.values()):
+                if job.remaining_iters <= _FINISH_TOL * max(1.0, job.iters):
+                    job.iters_done = job.iters
+                    job.state = JobState.FINISHED
+                    job.finish_time = self.time
+                    self.cluster.release(job.jid, job.placement)
+                    job.placement = frozenset()
+                    del self.running[job.jid]
+                    self._blocked_until.pop(job.jid, None)
+                    finished += 1
+                    self.log.append((self.time, "finish", job.jid))
+
+            # -- arrivals ----------------------------------------------
+            while (self._arrival_idx < len(self.arrivals)
+                   and self.arrivals[self._arrival_idx].arrival
+                       <= self.time + _EPS):
+                job = self.arrivals[self._arrival_idx]
+                self.pending.append(job)
+                self._arrival_idx += 1
+                self.log.append((self.time, "arrive", job.jid))
+
+            # -- tick bookkeeping --------------------------------------
+            tick_crossed = False
+            if (self._next_tick is not None
+                    and self.time + _EPS >= self._next_tick):
+                self._next_tick = self.time + self.scheduler.tick_interval
+                tick_crossed = True
+
+            # -- schedule ----------------------------------------------
+            if not self.scheduler.tick_only or tick_crossed:
+                self.scheduler.schedule(self.sim)
+            self._refresh_rates()
+
+        return self._results()
+
+
+# ---------------------------------------------------------------------- #
+class HeapEngine(EngineBase):
+    """Indexed event-heap engine (the default).
+
+    Two heaps share one set of live entries, validated by per-job
+    sequence numbers (``_entry_seq``):
+
+    * ``_heap``      — keyed by the predicted finish time; drives the
+                       next-event clock together with the next arrival
+                       and the next scheduler tick.
+    * ``_done_heap`` — keyed by the time at which the job's remaining
+                       work drops inside the finish tolerance; replays
+                       the scan engine's "complete at the first event
+                       where remaining <= tol" semantics without the
+                       per-event sweep.
+
+    Rates are recomputed only for the dirty set — jobs whose co-runner
+    sets changed via start/preempt/finish — and progress is accrued
+    lazily: at rate changes, completion, preemption, and (for policies
+    that declare ``reads_running_progress``) right before scheduling.
+    """
+
+    name = "heap"
+
+    def __init__(self, sim) -> None:
+        super().__init__(sim)
+        self._heap: List[tuple] = []
+        self._done_heap: List[tuple] = []
+        self._entry_seq: Dict[int, int] = {}
+        self._seq = 0
+        self._dirty: set = set()
+        self._pending_since: Dict[int, float] = {}
+
+    # -- bookkeeping hooks --------------------------------------------- #
+    def _drop_pending(self, job: Job) -> None:
+        pending = self.pending
+        for i, p in enumerate(pending):
+            if p is job:
+                del pending[i]
+                break
+        since = self._pending_since.pop(job.jid, None)
+        if since is not None:
+            job.waiting_time += self.time - since
+
+    def _on_start(self, job: Job) -> None:
+        dirty = self._dirty
+        occupancy = self.cluster.occupancy
+        dirty.add(job.jid)
+        for g in job.placement:
+            dirty.update(occupancy[g])
+
+    def _on_preempt(self, job: Job) -> None:
+        self._dirty.update(self.cluster.co_runners(job))
+        self._dirty.discard(job.jid)
+
+    def _on_requeued(self, job: Job) -> None:
+        self._entry_seq.pop(job.jid, None)
+        self._pending_since[job.jid] = self.time
+
+    # ------------------------------------------------------------------ #
+    def _refresh_dirty(self) -> None:
+        """Recompute rates and (re)index finish events for jobs whose
+        co-runner sets changed since the last event."""
+        dirty = self._dirty
+        if not dirty:
+            return
+        running = self.running
+        blocked = self._blocked_until
+        entry_seq = self._entry_seq
+        now = self.time
+        for jid in dirty:
+            job = running.get(jid)
+            if job is None:
+                continue
+            self._accrue(job, now)
+            rate = 1.0 / self.effective_t_iter(job)
+            job.current_rate = rate
+            b = blocked.get(jid, 0.0)
+            begin = now if now > b else b
+            rem = job.iters - job.iters_done
+            if rem < 0.0:
+                rem = 0.0
+            tol = _FINISH_TOL * (job.iters if job.iters > 1.0 else 1.0)
+            self._seq = seq = self._seq + 1
+            entry_seq[jid] = seq
+            heapq.heappush(self._heap, (begin + rem / rate, seq, jid))
+            heapq.heappush(self._done_heap,
+                           (begin + (rem - tol) / rate, seq, jid))
+        dirty.clear()
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> SimResults:
+        sim = self.sim
+        scheduler = self.scheduler
+        cluster = self.cluster
+        running = self.running
+        arrivals = self.arrivals
+        pending = self.pending
+        next_heap = self._heap
+        done_heap = self._done_heap
+        entry_seq = self._entry_seq
+        pending_since = self._pending_since
+        dirty = self._dirty
+        accrue = self._accrue
+        heappop = heapq.heappop
+        inf = math.inf
+        tick_only = scheduler.tick_only
+        reads_progress = getattr(scheduler, "reads_running_progress", True)
+        n_arrivals = len(arrivals)
+        finished = 0
+        total = len(self.jobs)
+        scheduler.reset()
+
+        while finished < total:
+            self._events += 1
+            if self._events > self.max_events:
+                raise RuntimeError(
+                    f"simulator exceeded {self.max_events} events "
+                    f"({finished}/{total} finished at t={self.time:.1f}; "
+                    f"pending={len(pending)})")
+
+            # -- next event: valid heap top vs arrival vs tick ---------
+            while next_heap and entry_seq.get(next_heap[0][2]) != next_heap[0][1]:
+                heappop(next_heap)
+            t_next = next_heap[0][0] if next_heap else inf
+            if self._arrival_idx < n_arrivals:
+                t_arr = arrivals[self._arrival_idx].arrival
+                if t_arr < t_next:
+                    t_next = t_arr
+            if self._next_tick is not None and self._next_tick < t_next:
+                t_next = self._next_tick
+            if t_next == inf:
+                raise RuntimeError(
+                    f"deadlock: {len(pending)} pending jobs, none "
+                    f"running, no arrivals left (t={self.time:.1f})")
+            if t_next < self.time - _EPS:
+                raise RuntimeError("time went backwards")
+            if t_next < self.time:
+                t_next = self.time
+            self.time = now = t_next
+
+            # -- completions: jobs due per the tolerance ordering ------
+            while done_heap:
+                key, seq, jid = done_heap[0]
+                if entry_seq.get(jid) != seq:
+                    heappop(done_heap)
+                    continue
+                if key > now:
+                    break
+                heappop(done_heap)
+                del entry_seq[jid]
+                job = running[jid]
+                accrue(job, now)
+                job.iters_done = job.iters
+                job.state = JobState.FINISHED
+                job.finish_time = now
+                for g in job.placement:
+                    dirty.update(cluster.occupancy[g])
+                dirty.discard(jid)
+                cluster.release(jid, job.placement)
+                job.placement = frozenset()
+                del running[jid]
+                self._blocked_until.pop(jid, None)
+                finished += 1
+                self.log.append((now, "finish", jid))
+
+            # -- arrivals ----------------------------------------------
+            idx = self._arrival_idx
+            while idx < n_arrivals and arrivals[idx].arrival <= now + _EPS:
+                job = arrivals[idx]
+                pending.append(job)
+                pending_since[job.jid] = now
+                idx += 1
+                self.log.append((now, "arrive", job.jid))
+            self._arrival_idx = idx
+
+            # -- tick bookkeeping --------------------------------------
+            tick_crossed = False
+            if self._next_tick is not None and now + _EPS >= self._next_tick:
+                self._next_tick = now + scheduler.tick_interval
+                tick_crossed = True
+
+            # -- schedule ----------------------------------------------
+            if not tick_only or tick_crossed:
+                if reads_progress:
+                    for job in running.values():
+                        accrue(job, now)
+                scheduler.schedule(sim)
+
+            # -- incremental rate refresh ------------------------------
+            self._refresh_dirty()
+
+        return self._results()
+
+
+ENGINES = {
+    "scan": ScanEngine,
+    "heap": HeapEngine,
+}
+
+
+def make_engine(name: str, sim) -> EngineBase:
+    try:
+        cls = ENGINES[name]
+    except KeyError:
+        raise ValueError(f"unknown simulator engine {name!r}; "
+                         f"choose from {sorted(ENGINES)}") from None
+    return cls(sim)

@@ -1,54 +1,27 @@
-"""Trace-driven discrete-event simulator for the multi-tenant cluster
-(Section VI). Jobs progress in continuous iterations; every event (arrival,
-completion, scheduler tick, preemption) re-derives each running job's
-effective rate 1 / (t_iter * max xi over co-runners) — gang scheduling means
-the slowest (most-contended) GPU paces the whole job."""
+"""Policy-facing facade over the trace-driven discrete-event simulator
+(Section VI). Jobs progress in continuous iterations; every event
+(arrival, completion, scheduler tick, preemption) re-derives the affected
+jobs' effective rate 1 / (t_iter * max xi over co-runners) — gang
+scheduling means the slowest (most-contended) GPU paces the whole job.
+
+The event loop itself lives in :mod:`repro.core.engine` (DESIGN.md §9):
+``engine="heap"`` (default) is the indexed event-heap engine with
+dirty-set interference refresh; ``engine="scan"`` is the pre-refactor
+reference loop kept for equivalence tests and the
+``benchmarks/sim_throughput.py`` before/after microbench. Schedulers
+only ever see this facade: ``pending``/``running``/``time``/``log`` and
+the ``start_job``/``preempt_job`` mutations proxy to the active engine.
+"""
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+import os
 from typing import Dict, List, Optional, Sequence
 
+from .engine import ENGINES, SimResults, make_engine
 from .interference import InterferenceModel
-from .job import ClusterState, Job, JobState
+from .job import ClusterState, Job
 
-_EPS = 1e-9
-
-
-@dataclass
-class SimResults:
-    jobs: List[Job]
-    makespan: float
-    events: int
-    name: str = ""
-
-    # ------------------------------------------------------------------ #
-    def _sel(self, large: Optional[bool]) -> List[Job]:
-        if large is None:
-            return self.jobs
-        return [j for j in self.jobs if (j.gpus > 4) == large]
-
-    def avg_jct(self, large: Optional[bool] = None) -> float:
-        sel = self._sel(large)
-        return sum(j.jct() for j in sel) / len(sel) if sel else 0.0
-
-    def avg_queueing(self, large: Optional[bool] = None) -> float:
-        sel = self._sel(large)
-        return sum(j.queueing_delay() for j in sel) / len(sel) if sel else 0.0
-
-    def jct_list(self) -> List[float]:
-        return sorted(j.jct() for j in self.jobs)
-
-    def summary(self) -> Dict[str, float]:
-        return {
-            "makespan": self.makespan,
-            "avg_jct": self.avg_jct(),
-            "avg_jct_large": self.avg_jct(True),
-            "avg_jct_small": self.avg_jct(False),
-            "avg_queue": self.avg_queueing(),
-            "avg_queue_large": self.avg_queueing(True),
-            "avg_queue_small": self.avg_queueing(False),
-        }
+__all__ = ["SchedulerBase", "SimResults", "Simulator"]
 
 
 class Simulator:
@@ -60,6 +33,7 @@ class Simulator:
         interference: Optional[InterferenceModel] = None,
         restart_penalty: float = 30.0,
         max_events: int = 2_000_000,
+        engine: Optional[str] = None,
     ) -> None:
         self.cluster = cluster
         self.jobs: Dict[int, Job] = {j.jid: j for j in jobs}
@@ -68,174 +42,44 @@ class Simulator:
         self.interference = interference or InterferenceModel()
         self.restart_penalty = restart_penalty
         self.max_events = max_events
+        self.engine_name = (engine or os.environ.get("REPRO_SIM_ENGINE")
+                            or "heap")
+        self.engine = make_engine(self.engine_name, self)
 
-        self.time = 0.0
-        self.pending: List[Job] = []
-        self.running: Dict[int, Job] = {}
-        self._arrival_idx = 0
-        self._blocked_until: Dict[int, float] = {}
-        self._next_tick = (scheduler.tick_interval
-                           if scheduler.tick_interval else None)
-        self._events = 0
-        self.log: List[tuple] = []
+    # ------------------------------------------------------------------ #
+    # State proxied from the engine (read-side of the scheduler API)
+    # ------------------------------------------------------------------ #
+    @property
+    def time(self) -> float:
+        return self.engine.time
+
+    @property
+    def pending(self) -> List[Job]:
+        return self.engine.pending
+
+    @property
+    def running(self) -> Dict[int, Job]:
+        return self.engine.running
+
+    @property
+    def log(self) -> List[tuple]:
+        return self.engine.log
 
     # ------------------------------------------------------------------ #
     # Scheduler-facing API
     # ------------------------------------------------------------------ #
     def start_job(self, job: Job, gpus: Sequence[int],
                   sub_batch: Optional[int] = None) -> None:
-        if job.state == JobState.RUNNING:
-            raise RuntimeError(f"job {job.jid} already running")
-        gset = frozenset(gpus)
-        want = job.alloc_gpus or job.gpus
-        if len(gset) != want:
-            raise RuntimeError(
-                f"job {job.jid} needs {want} GPUs, got {len(gset)}")
-        self.cluster.allocate(job.jid, gset)
-        job.placement = gset
-        if sub_batch is not None:
-            job.sub_batch = int(sub_batch)
-            job.accum_steps = max(1, int(round(job.batch / job.sub_batch)))
-        job.state = JobState.RUNNING
-        job.start_time = self.time
-        if job.first_start_time is None:
-            job.first_start_time = self.time
-        job.last_progress_at = self.time
-        penalty = self.restart_penalty if job.preemptions > 0 else 0.0
-        self._blocked_until[job.jid] = self.time + penalty
-        self.running[job.jid] = job
-        if job in self.pending:
-            self.pending.remove(job)
-        self.log.append((self.time, "start", job.jid, sorted(gset)))
+        self.engine.start_job(job, gpus, sub_batch=sub_batch)
 
     def preempt_job(self, job: Job) -> None:
-        if job.state != JobState.RUNNING:
-            raise RuntimeError(f"job {job.jid} not running")
-        self._accrue(job, self.time)
-        self.cluster.release(job.jid, job.placement)
-        job.placement = frozenset()
-        job.state = JobState.PENDING
-        job.preemptions += 1
-        job.current_rate = 0.0
-        del self.running[job.jid]
-        self._blocked_until.pop(job.jid, None)
-        self.pending.append(job)
-        self.log.append((self.time, "preempt", job.jid))
+        self.engine.preempt_job(job)
 
-    # ------------------------------------------------------------------ #
-    # Progress accounting
-    # ------------------------------------------------------------------ #
     def effective_t_iter(self, job: Job) -> float:
-        base = job.base_t_iter()
-        xi = 1.0
-        for other_id in self.cluster.co_runners(job):
-            other = self.jobs[other_id]
-            mem = (job.perf.mem_bytes(job.sub_batch)
-                   + other.perf.mem_bytes(other.sub_batch))
-            xi = max(xi, self.interference.xi(
-                job.model, other.model,
-                t_me=base,
-                t_other=other.perf.t_iter(other.batch, other.accum_steps),
-                mem_frac=mem / self.cluster.gpu_capacity_bytes))
-        return base * xi
+        return self.engine.effective_t_iter(job)
 
-    def _refresh_rates(self) -> None:
-        for job in self.running.values():
-            job.current_rate = 1.0 / self.effective_t_iter(job)
-
-    def _accrue(self, job: Job, now: float) -> None:
-        blocked_until = self._blocked_until.get(job.jid, 0.0)
-        begin = max(job.last_progress_at, blocked_until)
-        if now > begin and job.current_rate > 0:
-            job.iters_done = min(
-                job.iters, job.iters_done + (now - begin) * job.current_rate)
-        if now > job.last_progress_at:
-            job.attained_service += job.gpus * (now - job.last_progress_at)
-            # time stalled on restart/migration counts as queueing delay
-            stalled = min(now, blocked_until) - job.last_progress_at
-            if stalled > 0:
-                job.waiting_time += stalled
-        job.last_progress_at = now
-
-    def _predicted_finish(self, job: Job) -> float:
-        if job.current_rate <= 0:
-            return math.inf
-        begin = max(self.time, self._blocked_until.get(job.jid, 0.0))
-        return begin + job.remaining_iters / job.current_rate
-
-    # ------------------------------------------------------------------ #
     def run(self) -> SimResults:
-        finished = 0
-        total = len(self.jobs)
-        self._refresh_rates()
-        while finished < total:
-            self._events += 1
-            if self._events > self.max_events:
-                raise RuntimeError(
-                    f"simulator exceeded {self.max_events} events "
-                    f"({finished}/{total} finished at t={self.time:.1f}; "
-                    f"pending={len(self.pending)})")
-            # -- next event time ---------------------------------------
-            candidates: List[float] = []
-            if self._arrival_idx < len(self.arrivals):
-                candidates.append(self.arrivals[self._arrival_idx].arrival)
-            for job in self.running.values():
-                candidates.append(self._predicted_finish(job))
-            if self._next_tick is not None:
-                candidates.append(self._next_tick)
-            if not candidates:
-                raise RuntimeError(
-                    f"deadlock: {len(self.pending)} pending jobs, none "
-                    f"running, no arrivals left (t={self.time:.1f})")
-            t_next = min(candidates)
-            if t_next < self.time - _EPS:
-                raise RuntimeError("time went backwards")
-            t_next = max(t_next, self.time)
-
-            # -- advance all running jobs to t_next --------------------
-            for job in list(self.running.values()):
-                self._accrue(job, t_next)
-            for job in self.pending:
-                job.waiting_time += t_next - self.time
-            self.time = t_next
-
-            # -- completions -------------------------------------------
-            for job in list(self.running.values()):
-                if job.remaining_iters <= 1e-6 * max(1.0, job.iters):
-                    job.iters_done = job.iters
-                    job.state = JobState.FINISHED
-                    job.finish_time = self.time
-                    self.cluster.release(job.jid, job.placement)
-                    job.placement = frozenset()
-                    del self.running[job.jid]
-                    self._blocked_until.pop(job.jid, None)
-                    finished += 1
-                    self.log.append((self.time, "finish", job.jid))
-
-            # -- arrivals ----------------------------------------------
-            while (self._arrival_idx < len(self.arrivals)
-                   and self.arrivals[self._arrival_idx].arrival
-                       <= self.time + _EPS):
-                job = self.arrivals[self._arrival_idx]
-                self.pending.append(job)
-                self._arrival_idx += 1
-                self.log.append((self.time, "arrive", job.jid))
-
-            # -- tick bookkeeping --------------------------------------
-            tick_crossed = False
-            if (self._next_tick is not None
-                    and self.time + _EPS >= self._next_tick):
-                self._next_tick = self.time + self.scheduler.tick_interval
-                tick_crossed = True
-
-            # -- schedule ----------------------------------------------
-            if not self.scheduler.tick_only or tick_crossed:
-                self.scheduler.schedule(self)
-            self._refresh_rates()
-
-        makespan = max(j.finish_time for j in self.jobs.values())
-        return SimResults(jobs=list(self.jobs.values()), makespan=makespan,
-                          events=self._events, name=self.scheduler.name)
+        return self.engine.run()
 
 
 class SchedulerBase:
@@ -245,6 +89,16 @@ class SchedulerBase:
     preemptive: bool = False
     tick_interval: Optional[float] = None
     tick_only: bool = False   # act only on ticks (interval schedulers)
+    # Does schedule() read running jobs' progress (iters_done /
+    # attained_service / remaining_iters)? Policies that only look at
+    # static job fields and the pending queue can set this False so the
+    # heap engine skips the per-event accrual sweep (DESIGN.md §9).
+    reads_running_progress: bool = True
+
+    def reset(self) -> None:
+        """Called by the engine when a run starts. Stateful schedulers
+        (incremental queues, per-job caches) clear per-run state here so
+        one instance can drive several simulations."""
 
     def schedule(self, sim: Simulator) -> None:  # pragma: no cover
         raise NotImplementedError

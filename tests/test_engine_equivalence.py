@@ -1,0 +1,110 @@
+"""The event-heap engine must reproduce the pre-refactor scan engine
+exactly: same event count and per-job finish times on a seeded trace for
+every policy, under the paper's pair-table interference model, the
+structural fallback model, and a global-xi injection (DESIGN.md §9)."""
+import pytest
+
+from repro.core import (ClusterState, InterferenceModel, Simulator,
+                        make_scheduler, paper_interference_model,
+                        simulation_trace)
+from repro.core.schedulers import ALL_POLICIES
+
+REL = 1e-6
+
+
+def _run(policy, engine, interference=None, n_jobs=100):
+    jobs = simulation_trace(n_jobs=n_jobs, seed=7)
+    cluster = ClusterState(n_servers=16, gpus_per_server=4,
+                           gpu_capacity_bytes=11 * 2 ** 30)
+    sim = Simulator(cluster, jobs, make_scheduler(policy),
+                    interference=interference or paper_interference_model(),
+                    engine=engine)
+    return sim.run()
+
+
+def _assert_equivalent(a, b):
+    assert a.events == b.events
+    sa, sb = a.summary(), b.summary()
+    for key, val in sa.items():
+        assert sb[key] == pytest.approx(val, rel=REL, abs=REL), key
+    for ja, jb in zip(sorted(a.jobs, key=lambda j: j.jid),
+                      sorted(b.jobs, key=lambda j: j.jid)):
+        assert jb.finish_time == pytest.approx(ja.finish_time, rel=REL)
+        assert jb.waiting_time == pytest.approx(ja.waiting_time,
+                                                rel=REL, abs=1e-3)
+        assert jb.preemptions == ja.preemptions
+
+
+@pytest.mark.parametrize("policy", sorted(ALL_POLICIES))
+def test_heap_matches_scan_paper_model(policy):
+    _assert_equivalent(_run(policy, "scan"), _run(policy, "heap"))
+
+
+@pytest.mark.parametrize("policy", ["sjf-ffs", "sjf-bsbf"])
+def test_heap_matches_scan_structural_model(policy):
+    """The structural xi fallback exercises the per-candidate xi path
+    that the pair-table hoist skips."""
+    _assert_equivalent(
+        _run(policy, "scan", interference=InterferenceModel()),
+        _run(policy, "heap", interference=InterferenceModel()))
+
+
+@pytest.mark.parametrize("policy", ["sjf-bsbf", "tiresias"])
+def test_heap_matches_scan_global_xi(policy):
+    _assert_equivalent(
+        _run(policy, "scan", interference=InterferenceModel(global_xi=1.4)),
+        _run(policy, "heap", interference=InterferenceModel(global_xi=1.4)))
+
+
+def test_engine_selection():
+    res_scan = _run("sjf", "scan", n_jobs=30)
+    res_heap = _run("sjf", "heap", n_jobs=30)
+    assert res_scan.name == res_heap.name == "sjf"
+    with pytest.raises(ValueError, match="unknown simulator engine"):
+        _run("sjf", "btree", n_jobs=10)
+
+
+def test_default_engine_is_heap():
+    jobs = simulation_trace(n_jobs=10, seed=0)
+    cluster = ClusterState(n_servers=4, gpus_per_server=4)
+    sim = Simulator(cluster, jobs, make_scheduler("fifo"))
+    assert sim.engine_name == "heap"
+
+
+def test_static_order_rekeys_requeued_jobs():
+    """A job re-entering the queue after a preemption may carry a new
+    sort key; the incremental order must detect it (via the preemption
+    count) instead of replaying the stale position."""
+    from repro.core.job import JobState
+    from repro.core.schedulers import _StaticOrder
+    from repro.core.perf_model import PerfParams
+    from repro.core.job import Job
+
+    def mk(jid, iters):
+        perf = PerfParams(alpha_comp=0.0, beta_comp=1e-2, alpha_comm=0.0,
+                          beta_comm=0.0, msg_bytes=0.0)
+        return Job(jid=jid, model="m", arrival=0.0, gpus=1, iters=iters,
+                   batch=10, perf=perf)
+
+    a, b = mk(0, 100.0), mk(1, 200.0)
+    order = _StaticOrder(lambda j: j.expected_remaining_time)
+    assert order.order([a, b]) == [a, b]
+    # b runs, progresses past a's remaining work, and is preempted
+    b.state = JobState.RUNNING
+    assert order.order([a]) == [a]
+    b.iters_done = 150.0
+    b.preemptions += 1
+    b.state = JobState.PENDING
+    assert order.order([a, b]) == [b, a]   # stale key would say [a, b]
+
+
+def test_heap_deadlock_detection():
+    """The heap engine must keep the scan engine's deadlock diagnostics
+    (job larger than the cluster, no ticks to hide behind)."""
+    jobs = simulation_trace(n_jobs=3, seed=1)
+    big = max(jobs, key=lambda j: j.gpus)
+    big.gpus = 999
+    cluster = ClusterState(n_servers=4, gpus_per_server=4)
+    sim = Simulator(cluster, jobs, make_scheduler("fifo"), engine="heap")
+    with pytest.raises(RuntimeError, match="deadlock"):
+        sim.run()

@@ -2,8 +2,8 @@
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.perf_model import (GPU_2080TI, TPU_V5E, PerfParams,
                                    derive_perf_params, fit_comp_params,

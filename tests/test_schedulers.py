@@ -5,8 +5,8 @@ certifies packing; we additionally check gang semantics, completion,
 non-preemption for the non-preemptive policies, and policy-specific
 behaviours."""
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.core import (ClusterState, InterferenceModel, Simulator,
                         make_scheduler, paper_interference_model)

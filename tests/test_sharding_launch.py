@@ -7,7 +7,8 @@ import sys
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.hlo_flops import hlo_flops_bytes

@@ -1,0 +1,73 @@
+"""Parallel sweep determinism and plumbing: per-scenario seeding is
+derived from the spec alone, so the canonical aggregate output must be
+byte-identical across runs and worker counts (DESIGN.md §9)."""
+import json
+
+import pytest
+
+from repro.core.sweep import (ScenarioSpec, grid, normalize_policy,
+                              run_scenario, run_sweep, rows_by_policy,
+                              to_canonical_json)
+
+
+def _specs():
+    return grid(("sjf", "sjf-bsbf"), seeds=(0, 1), n_jobs=24,
+                n_servers=8, gpus_per_server=4)
+
+
+def test_policy_normalization():
+    assert normalize_policy("sjf_bsbf") == "sjf-bsbf"
+    assert normalize_policy("SJF-FFS") == "sjf-ffs"
+    with pytest.raises(ValueError, match="unknown policy"):
+        normalize_policy("edf")
+
+
+def test_grid_shape():
+    specs = _specs()
+    assert len(specs) == 4
+    assert {s.policy for s in specs} == {"sjf", "sjf-bsbf"}
+    assert {s.seed for s in specs} == {0, 1}
+
+
+def test_parallel_matches_serial_and_is_byte_identical():
+    specs = _specs()
+    serial = run_sweep(specs, workers=1)
+    parallel_a = run_sweep(specs, workers=2)
+    parallel_b = run_sweep(specs, workers=4)
+    assert (to_canonical_json(serial) == to_canonical_json(parallel_a)
+            == to_canonical_json(parallel_b))
+
+
+def test_row_contents():
+    row = run_scenario(ScenarioSpec(policy="sjf", n_jobs=16, seed=3,
+                                    n_servers=8, gpus_per_server=4,
+                                    collect=("jct_deciles",)))
+    assert row["policy"] == "sjf"
+    assert row["events"] > 0
+    assert len(row["jct_deciles"]) == 10
+    assert row["jct_deciles"] == sorted(row["jct_deciles"])
+    assert set(row["summary"]) >= {"makespan", "avg_jct", "avg_queue"}
+    assert row["wall_seconds"] >= 0.0
+    # canonical serialization drops the timing field
+    canon = json.loads(to_canonical_json([row]))[0]
+    assert "wall_seconds" not in canon and canon["policy"] == "sjf"
+
+
+def test_rows_by_policy():
+    rows = run_sweep(grid(("fifo", "sjf"), n_jobs=12, n_servers=8,
+                          gpus_per_server=4), workers=1)
+    payload = rows_by_policy(rows)
+    assert set(payload) == {"fifo", "sjf"}
+    assert payload["sjf"]["avg_jct"] > 0
+
+
+def test_global_xi_and_physical_trace():
+    row = run_scenario(ScenarioSpec(policy="sjf-ffs", trace="physical",
+                                    n_servers=4, global_xi=1.3))
+    assert row["trace"] == "physical"
+    assert row["summary"]["makespan"] > 0
+    with pytest.raises(ValueError, match="unknown trace"):
+        run_scenario(ScenarioSpec(policy="sjf", trace="nope"))
+    with pytest.raises(ValueError, match="unknown collect"):
+        run_scenario(ScenarioSpec(policy="sjf", n_jobs=4,
+                                  collect=("nope",)))

@@ -4,8 +4,8 @@ sequential). We verify against a brute-force kappa grid."""
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.pair import (PairJob, best_pair_schedule,
                              monotonicity_coefficient, pair_timeline)
