@@ -1,0 +1,176 @@
+"""Scheduler-decision benchmark: batched vs scalar sharing-decision core
+at datacenter scale (DESIGN.md §10).
+
+For each cluster size in {64, 256, 1024, 4096} GPUs the bench runs the
+same heavy-tailed :func:`repro.core.trace.datacenter_trace` workload
+through SJF-BSBF twice — once with the scalar per-(pending, donor)
+Algorithm-2 reference, once with the vectorized
+:mod:`repro.core.pair_batch` core — and reports per-scheduling-pass
+latency, end-to-end events/sec, and the speedup. The two runs must
+produce *identical* schedules (asserted on ``avg_jct`` and event
+counts); the acceptance bar is a >= 3x scheduler-pass speedup at the
+1024-GPU / 5k-job scenario.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.sched_decision_bench
+    PYTHONPATH=src python -m benchmarks.sched_decision_bench --smoke
+    PYTHONPATH=src python -m benchmarks.sched_decision_bench \
+        --sizes 64,256 --out artifacts/bench/BENCH_sched_decision.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+from repro.core import (ClusterState, Simulator, make_scheduler,
+                        paper_interference_model)
+from repro.core.trace import datacenter_trace
+
+# gpus -> n_jobs for the full bench (the 1024/5000 point is the
+# acceptance scenario; 4096/10000 is the ROADMAP's Philly/Helios regime)
+DEFAULT_JOBS = {64: 600, 256: 2000, 1024: 5000, 4096: 10000}
+GPUS_PER_SERVER = 8
+GB = 2 ** 30
+
+
+class TimedScheduler:
+    """Transparent wrapper measuring time spent inside ``schedule()``;
+    forwards the attributes the engine reads from the policy."""
+
+    def __init__(self, inner) -> None:
+        self.inner = inner
+        self.name = inner.name
+        self.preemptive = inner.preemptive
+        self.tick_interval = inner.tick_interval
+        self.tick_only = inner.tick_only
+        self.reads_running_progress = inner.reads_running_progress
+        self.progress_scope = inner.progress_scope
+        self.passes = 0
+        self.seconds = 0.0
+
+    def reset(self) -> None:
+        self.inner.reset()
+
+    def schedule(self, sim) -> None:
+        t0 = time.perf_counter()
+        self.inner.schedule(sim)
+        self.seconds += time.perf_counter() - t0
+        self.passes += 1
+
+
+def run_once(policy: str, decision: str, n_gpus: int, n_jobs: int,
+             seed: int, utilization: float) -> Dict:
+    jobs = datacenter_trace(n_jobs=n_jobs, seed=seed, n_gpus=n_gpus,
+                            utilization=utilization)
+    cluster = ClusterState(n_servers=n_gpus // GPUS_PER_SERVER,
+                           gpus_per_server=GPUS_PER_SERVER,
+                           gpu_capacity_bytes=11 * GB)
+    sched = TimedScheduler(make_scheduler(policy))
+    sim = Simulator(cluster, jobs, sched,
+                    interference=paper_interference_model(),
+                    decision=decision, max_events=5_000_000)
+    t0 = time.perf_counter()
+    res = sim.run()
+    wall = time.perf_counter() - t0
+    return {
+        "decision": decision,
+        "events": res.events,
+        "avg_jct": res.avg_jct(),
+        "makespan": res.makespan,
+        "wall_seconds": wall,
+        "events_per_sec": res.events / wall,
+        "sched_passes": sched.passes,
+        "sched_seconds": sched.seconds,
+        "sched_pass_ms": 1e3 * sched.seconds / max(1, sched.passes),
+    }
+
+
+def run_size(policy: str, n_gpus: int, n_jobs: int, seed: int,
+             utilization: float, verbose: bool = True) -> Dict:
+    row: Dict = {"policy": policy, "n_gpus": n_gpus, "n_jobs": n_jobs,
+                 "seed": seed, "utilization": utilization}
+    for decision in ("scalar", "batched"):
+        r = run_once(policy, decision, n_gpus, n_jobs, seed, utilization)
+        row[decision] = r
+        if verbose:
+            print(f"  {decision:>7}: {r['wall_seconds']:8.2f}s wall  "
+                  f"{r['events_per_sec']:9.0f} ev/s  "
+                  f"{r['sched_pass_ms']:8.3f} ms/pass  "
+                  f"avg_jct={r['avg_jct']:.3f}")
+    a, b = row["scalar"], row["batched"]
+    if a["avg_jct"] != b["avg_jct"] or a["events"] != b["events"]:
+        raise AssertionError(
+            f"decision paths diverged at {n_gpus} GPUs: "
+            f"scalar avg_jct={a['avg_jct']!r} events={a['events']} vs "
+            f"batched avg_jct={b['avg_jct']!r} events={b['events']}")
+    row["identical_avg_jct"] = True
+    row["sched_pass_speedup"] = a["sched_pass_ms"] / b["sched_pass_ms"]
+    row["events_per_sec_speedup"] = (b["events_per_sec"]
+                                     / a["events_per_sec"])
+    if verbose:
+        print(f"  => pass speedup {row['sched_pass_speedup']:.2f}x, "
+              f"end-to-end {row['events_per_sec_speedup']:.2f}x")
+    return row
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--policy", default="sjf-bsbf")
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated GPU counts (default: 64,256,"
+                         "1024,4096; jobs scale with the size)")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="override the per-size job count")
+    ap.add_argument("--seed", type=int, default=0)
+    # offered load of 1.5x capacity: the decision layer is exercised
+    # hardest when jobs queue and every pass walks pending x donors (the
+    # paper's own load sweep reaches 2.0x)
+    ap.add_argument("--utilization", type=float, default=1.5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration (64 GPUs, 200 jobs)")
+    ap.add_argument("--out", default=os.path.join(
+        "artifacts", "bench", "BENCH_sched_decision.json"))
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        scenarios = [(64, 200)]
+    else:
+        sizes = ([int(s) for s in args.sizes.split(",")] if args.sizes
+                 else sorted(DEFAULT_JOBS))
+        scenarios = [(g, args.jobs or DEFAULT_JOBS.get(g, 5 * g))
+                     for g in sizes]
+
+    rows = []
+    for n_gpus, n_jobs in scenarios:
+        print(f"[{args.policy}] {n_gpus} GPUs / {n_jobs} jobs "
+              f"(utilization={args.utilization})")
+        rows.append(run_size(args.policy, n_gpus, n_jobs, args.seed,
+                             args.utilization))
+
+    payload = {
+        "bench": "sched_decision",
+        "policy": args.policy,
+        "smoke": bool(args.smoke),
+        "gpus_per_server": GPUS_PER_SERVER,
+        "rows": rows,
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+    # acceptance: >= 3x pass speedup at the 1024-GPU scenario
+    for row in rows:
+        if row["n_gpus"] == 1024 and row["sched_pass_speedup"] < 3.0:
+            print(f"WARNING: pass speedup {row['sched_pass_speedup']:.2f}x "
+                  f"below the 3x bar at 1024 GPUs")
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,9 +4,19 @@ from .batch_scaling import SharingConfig, best_sharing_config
 from .interference import InterferenceModel, paper_interference_model
 from .job import ClusterState, Job, JobState
 from .pair import PairDecision, PairJob, best_pair_schedule, pair_timeline
+try:   # the vectorized decision core needs numpy; scalar core does not
+    from .pair_batch import (DonorBatch, DonorDecisions,
+                             best_sharing_config_batched,
+                             best_sharing_configs, job_candidate_table)
+    _PAIR_BATCH_ALL = [
+        "DonorBatch", "DonorDecisions", "best_sharing_config_batched",
+        "best_sharing_configs", "job_candidate_table",
+    ]
+except ModuleNotFoundError:   # pragma: no cover - numpy-less env
+    _PAIR_BATCH_ALL = []
 from .perf_model import (GPU_2080TI, TPU_V5E, HardwareSpec, PerfParams,
                          derive_perf_params, fit_comp_params, infer_xi,
-                         ring_allreduce_bytes)
+                         ring_allreduce_bytes, t_iter_at_workers)
 from .engine import ENGINES, HeapEngine, ScanEngine
 from .schedulers import (ALL_POLICIES, FIFO, SJF, SJF_BSBF, SJF_FFS, SRSF,
                          PolluxLike, Tiresias, make_scheduler)
@@ -14,20 +24,24 @@ from .simulator import SchedulerBase, SimResults, Simulator
 from .sweep import (ScenarioSpec, grid, run_scenario, run_sweep,
                     rows_by_policy, summary_table, write_csv, write_json)
 from .tasks import PAPER_TASK_PROFILES, TaskProfile, profile_from_arch
-from .trace import TraceConfig, generate_trace, physical_trace, simulation_trace
+from .trace import (TraceConfig, datacenter_trace, generate_trace,
+                    physical_trace, simulation_trace)
 
 __all__ = [
-    "ALL_POLICIES", "ClusterState", "ENGINES", "FIFO", "GPU_2080TI",
+    "ALL_POLICIES", "ClusterState",
+    "ENGINES", "FIFO", "GPU_2080TI",
     "HardwareSpec", "HeapEngine", "InterferenceModel", "Job", "JobState",
     "PAPER_TASK_PROFILES",
     "PairDecision", "PairJob", "PerfParams", "PolluxLike", "SJF", "SJF_BSBF", "SRSF",
     "SJF_FFS", "ScanEngine", "ScenarioSpec", "SchedulerBase",
     "SharingConfig", "SimResults", "Simulator",
     "TPU_V5E", "TaskProfile", "Tiresias", "TraceConfig",
-    "best_pair_schedule", "best_sharing_config", "derive_perf_params",
-    "fit_comp_params", "generate_trace", "grid", "infer_xi", "make_scheduler",
+    "best_pair_schedule", "best_sharing_config",
+    "datacenter_trace", "derive_perf_params",
+    "fit_comp_params", "generate_trace", "grid", "infer_xi",
+    "make_scheduler",
     "pair_timeline", "paper_interference_model", "physical_trace",
     "profile_from_arch", "ring_allreduce_bytes", "rows_by_policy",
     "run_scenario", "run_sweep", "simulation_trace", "summary_table",
-    "write_csv", "write_json",
-]
+    "t_iter_at_workers", "write_csv", "write_json",
+] + _PAIR_BATCH_ALL

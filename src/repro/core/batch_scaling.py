@@ -1,10 +1,16 @@
 """Algorithm 2 — Batch Size Scaling with Best Sharing Benefit.
 
 Given a running job and a new job that would share the running job's GPUs,
-sweep the new job's per-GPU sub-batch b over {B, B/2, B/4, ..., 1}
-(gradient accumulation supplies s = B/b to keep the *effective* batch, and
-hence convergence, unchanged), check memory feasibility of the pair, apply
-Theorem 1 per candidate, and return the best (SF, b, t_bar).
+sweep the new job's per-GPU sub-batch b over {B, ceil(B/2), ..., 1}
+(gradient accumulation supplies s = ceil(B/b) micro-steps — the final
+micro-batch absorbs the remainder when b does not divide B, so the
+*effective* batch, and hence convergence, is unchanged for every
+candidate), check memory feasibility of the pair, apply Theorem 1 per
+candidate, and return the best (SF, b, t_bar).
+
+:mod:`repro.core.pair_batch` is the NumPy-vectorized form of the same
+sweep over *all* donors at once; this scalar version is kept as the
+equivalence reference (``tests/test_pair_batch.py``).
 """
 from __future__ import annotations
 
@@ -58,11 +64,11 @@ def best_sharing_config(
     best: Optional[SharingConfig] = None
 
     for b in candidate_sub_batches(new.batch):
-        s = max(1, int(round(new.batch / b)))
+        s = max(1, math.ceil(new.batch / b))
         new_mem = new.perf.mem_bytes(b)
         if new_mem + run_mem > gpu_capacity_bytes:
             continue  # pair does not fit device memory at this sub-batch
-        t_new = new.t_iter_accum(s)
+        t_new = new.t_iter_sub(b)
         if fixed_xi is not None:
             xi_run, xi_new = fixed_xi
         else:

@@ -121,7 +121,10 @@ class EngineBase:
         job.placement = gset
         if sub_batch is not None:
             job.sub_batch = int(sub_batch)
-            job.accum_steps = max(1, int(round(job.batch / job.sub_batch)))
+            # ceil, not round: for b that does not divide B the final
+            # micro-batch absorbs the remainder (s*b >= B), keeping the
+            # effective batch — and convergence — unchanged.
+            job.accum_steps = max(1, math.ceil(job.batch / job.sub_batch))
         job.state = JobState.RUNNING
         job.start_time = self.time
         if job.first_start_time is None:
@@ -220,9 +223,12 @@ class ScanEngine(EngineBase):
     name = "scan"
 
     def effective_t_iter(self, job: Job) -> float:
-        # Verbatim pre-refactor body (no solo_t_iter memo on the
-        # co-runner lookup): this engine is the frozen "before" the
-        # microbench compares against.
+        # Pre-refactor body (no solo_t_iter memo on the co-runner
+        # lookup): this engine is the frozen "before" the microbench
+        # compares against. Only the t_other pricing follows the
+        # final-microbatch-aware Eq. 7 (t_iter_sub) so both engines see
+        # the same structural xi for non-divisor sub-batches — for the
+        # divisor-only traces of the seed it is the identical value.
         base = job.base_t_iter()
         xi = 1.0
         for other_id in self.cluster.co_runners(job):
@@ -232,7 +238,7 @@ class ScanEngine(EngineBase):
             xi = max(xi, self.interference.xi(
                 job.model, other.model,
                 t_me=base,
-                t_other=other.perf.t_iter(other.batch, other.accum_steps),
+                t_other=other.perf.t_iter_sub(other.batch, other.sub_batch),
                 mem_frac=mem / self.cluster.gpu_capacity_bytes))
         return base * xi
 
@@ -421,6 +427,8 @@ class HeapEngine(EngineBase):
         inf = math.inf
         tick_only = scheduler.tick_only
         reads_progress = getattr(scheduler, "reads_running_progress", True)
+        donors_only = (getattr(scheduler, "progress_scope", "all")
+                       == "donors")
         n_arrivals = len(arrivals)
         finished = 0
         total = len(self.jobs)
@@ -498,8 +506,15 @@ class HeapEngine(EngineBase):
             # -- schedule ----------------------------------------------
             if not tick_only or tick_crossed:
                 if reads_progress:
-                    for job in running.values():
-                        accrue(job, now)
+                    if donors_only:
+                        # Algorithm 1 only reads donors' remaining work;
+                        # everyone else keeps accruing lazily at rate
+                        # changes / completion (order-insensitive).
+                        for jid in cluster.donor_jids():
+                            accrue(running[jid], now)
+                    else:
+                        for job in running.values():
+                            accrue(job, now)
                 scheduler.schedule(sim)
 
             # -- incremental rate refresh ------------------------------

@@ -6,7 +6,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, List, Optional, Set, Tuple
 
-from .perf_model import PerfParams, ring_allreduce_bytes
+from .perf_model import PerfParams, t_iter_at_workers
 
 
 class JobState(enum.Enum):
@@ -43,14 +43,20 @@ class Job:
     attained_service: float = 0.0   # gpus * seconds (Tiresias)
     alloc_gpus: Optional[int] = None  # elastic allocation (Pollux-like only)
     waiting_time: float = 0.0       # total time not holding GPUs (queue + preempted)
-    # memos: solo_t_iter keyed by accum_steps, and t_iter keyed by the
-    # candidate accumulation count (scheduler sort keys and Algorithm-2
-    # sub-batch sweeps hit these millions of times on large traces)
+    # memos: solo_t_iter keyed by sub_batch, t_iter keyed by the candidate
+    # sub-batch / accumulation count (scheduler sort keys and Algorithm-2
+    # sub-batch sweeps hit these millions of times on large traces), the
+    # solo-fit sub-batch per capacity, and the Algorithm-2 candidate
+    # arrays built lazily by :mod:`repro.core.pair_batch`
     _t_iter_memo: Optional[tuple] = field(
         default=None, repr=False, compare=False)
-    _t_iter_by_s: Dict[int, float] = field(
+    _t_iter_by_b: Dict[int, float] = field(
         default_factory=dict, repr=False, compare=False)
     _ert_memo: Optional[tuple] = field(
+        default=None, repr=False, compare=False)
+    _solo_sub_memo: Dict[float, Optional[int]] = field(
+        default_factory=dict, repr=False, compare=False)
+    _pair_table: Optional[tuple] = field(
         default=None, repr=False, compare=False)
 
     def __post_init__(self) -> None:
@@ -61,10 +67,10 @@ class Job:
     @property
     def solo_t_iter(self) -> float:
         memo = self._t_iter_memo
-        if memo is not None and memo[0] == self.accum_steps:
+        if memo is not None and memo[0] == self.sub_batch:
             return memo[1]
-        val = self.perf.t_iter(self.batch, self.accum_steps)
-        self._t_iter_memo = (self.accum_steps, val)
+        val = self.perf.t_iter_sub(self.batch, self.sub_batch)
+        self._t_iter_memo = (self.sub_batch, val)
         return val
 
     def base_t_iter(self) -> float:
@@ -76,27 +82,17 @@ class Job:
         n = self.alloc_gpus or self.gpus
         if n == self.gpus:
             return self.solo_t_iter
-        p = self.perf
-        sub = self.batch / self.accum_steps
-        tc = p.t_comp(sub)
-        tn = (p.alpha_comm * max(1, math.ceil(math.log2(max(2, n))))
-              + p.beta_comm * ring_allreduce_bytes(p.param_bytes, n))
-        d = p.delta
-        t_phys = (self.accum_steps - 1) * tc + (tc ** d + tn ** d) ** (1.0 / d)
+        t_phys = t_iter_at_workers(self.perf, self.batch, self.accum_steps, n)
         return t_phys * self.gpus / n
 
-    def t_iter_at(self, sub_batch: int) -> float:
-        s = max(1, int(round(self.batch / max(1, sub_batch))))
-        return self.t_iter_accum(s)
-
-    def t_iter_accum(self, accum_steps: int) -> float:
-        """Memoized ``perf.t_iter(batch, accum_steps)`` — the Algorithm-2
-        sweep re-evaluates the same handful of accumulation counts for a
-        job on every scheduling pass."""
-        val = self._t_iter_by_s.get(accum_steps)
+    def t_iter_sub(self, sub_batch: int) -> float:
+        """Memoized ``perf.t_iter_sub(batch, sub_batch)`` — the
+        Algorithm-2 sweep re-evaluates the same handful of candidate
+        sub-batches for a job on every scheduling pass."""
+        val = self._t_iter_by_b.get(sub_batch)
         if val is None:
-            val = self.perf.t_iter(self.batch, accum_steps)
-            self._t_iter_by_s[accum_steps] = val
+            val = self.perf.t_iter_sub(self.batch, sub_batch)
+            self._t_iter_by_b[sub_batch] = val
         return val
 
     @property
@@ -106,15 +102,15 @@ class Job:
     @property
     def expected_remaining_time(self) -> float:
         """L_k = t_iter * remaining iterations (solo estimate, used by
-        SJF). Memoized on (iters_done, accum_steps): sort keys of queued
+        SJF). Memoized on (iters_done, sub_batch): sort keys of queued
         jobs are re-read every scheduling pass but only change when the
         job actually progresses."""
         memo = self._ert_memo
         if (memo is not None and memo[0] == self.iters_done
-                and memo[1] == self.accum_steps):
+                and memo[1] == self.sub_batch):
             return memo[2]
         val = self.solo_t_iter * self.remaining_iters
-        self._ert_memo = (self.iters_done, self.accum_steps, val)
+        self._ert_memo = (self.iters_done, self.sub_batch, val)
         return val
 
     @property
@@ -141,7 +137,17 @@ class Job:
 
 @dataclass
 class ClusterState:
-    """Servers x GPUs with <= C jobs per GPU (C=2 in the paper)."""
+    """Servers x GPUs with <= C jobs per GPU (C=2 in the paper).
+
+    The free set, single-occupancy set, per-server free sets, and the
+    donor (job -> #single-occupancy GPUs) index are maintained as O(Δ)
+    updates inside :meth:`allocate`/:meth:`release` — the sharing
+    schedulers read them every pass, and the previous version-gated
+    full rescans were O(n_gpus) per pass at datacenter scale. The
+    sorted list views handed to schedulers are materialized lazily from
+    the sets (cached per occupancy version) so callers keep the exact
+    id-ordering semantics of the original scan.
+    """
 
     n_servers: int
     gpus_per_server: int
@@ -149,43 +155,105 @@ class ClusterState:
     gpu_capacity_bytes: float = 16 * 2**30
 
     occupancy: Dict[int, List[int]] = field(default_factory=dict)  # gpu -> [jid]
-    # occupancy-version caches for the per-scheduling-pass GPU scans;
-    # bumped on every allocate/release
+    # occupancy-version caches for the sorted list views; bumped on
+    # every allocate/release
     _version: int = field(default=0, repr=False, compare=False)
     _free_cache: tuple = field(default=(-1, None), repr=False, compare=False)
     _single_cache: tuple = field(default=(-1, None), repr=False, compare=False)
+    # incremental indexes (maintained by allocate/release)
+    _free: Set[int] = field(default_factory=set, repr=False, compare=False)
+    _single: Set[int] = field(default_factory=set, repr=False, compare=False)
+    _free_by_server: List[Set[int]] = field(
+        default_factory=list, repr=False, compare=False)
+    _single_owner: Dict[int, int] = field(
+        default_factory=dict, repr=False, compare=False)   # gpu -> sole jid
+    _donor_count: Dict[int, int] = field(
+        default_factory=dict, repr=False, compare=False)   # jid -> #single GPUs
 
     def __post_init__(self) -> None:
         for g in range(self.n_gpus):
             self.occupancy.setdefault(g, [])
+        self._free_by_server = [set() for _ in range(self.n_servers)]
+        for g in range(self.n_gpus):
+            occ = self.occupancy[g]
+            if not occ:
+                self._free.add(g)
+                self._free_by_server[self.server_of(g)].add(g)
+            elif len(occ) == 1:
+                self._mark_single(g, occ[0])
 
     @property
     def n_gpus(self) -> int:
         return self.n_servers * self.gpus_per_server
 
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_single(self) -> int:
+        return len(self._single)
+
+    @property
+    def version(self) -> int:
+        """Occupancy version, bumped on every allocate/release — lets
+        callers cache occupancy-derived views (donor batches, sorted
+        GPU lists) and invalidate them on placement changes."""
+        return self._version
+
     def server_of(self, gpu: int) -> int:
         return gpu // self.gpus_per_server
 
+    # -- incremental index maintenance --------------------------------- #
+    def _mark_single(self, gpu: int, jid: int) -> None:
+        self._single.add(gpu)
+        self._single_owner[gpu] = jid
+        self._donor_count[jid] = self._donor_count.get(jid, 0) + 1
+
+    def _unmark_single(self, gpu: int) -> None:
+        self._single.discard(gpu)
+        jid = self._single_owner.pop(gpu)
+        left = self._donor_count[jid] - 1
+        if left:
+            self._donor_count[jid] = left
+        else:
+            del self._donor_count[jid]
+
     # ------------------------------------------------------------------ #
     def free_gpus(self) -> List[int]:
-        """GPUs with no tenant. Callers must treat the result as
-        read-only: it is cached until the next allocate/release."""
+        """GPUs with no tenant, in id order. Callers must treat the
+        result as read-only: it is cached until the next
+        allocate/release."""
         if self._free_cache[0] != self._version:
-            self._free_cache = (self._version, [
-                g for g in range(self.n_gpus) if not self.occupancy[g]])
+            self._free_cache = (self._version, sorted(self._free))
         return self._free_cache[1]
 
     def single_occupancy_gpus(self) -> List[int]:
-        """GPUs with exactly one tenant (sharing candidates). Read-only;
-        cached until the next allocate/release."""
+        """GPUs with exactly one tenant (sharing candidates), in id
+        order. Read-only; cached until the next allocate/release."""
         if self._single_cache[0] != self._version:
-            self._single_cache = (self._version, [
-                g for g in range(self.n_gpus)
-                if len(self.occupancy[g]) == 1])
+            self._single_cache = (self._version, sorted(self._single))
         return self._single_cache[1]
+
+    def donor_jids(self) -> Set[int]:
+        """Jobs owning at least one single-occupancy GPU (the Algorithm-1
+        donor candidates). Read-only live view."""
+        return self._donor_count.keys()
 
     def jobs_on(self, gpu: int) -> List[int]:
         return list(self.occupancy[gpu])
+
+    @staticmethod
+    def _pick_from_buckets(buckets, k: int) -> List[int]:
+        """Take GPUs bucket-by-bucket (id-ascending within a bucket)
+        until ``k`` are picked; may return < k (caller checks)."""
+        picked: List[int] = []
+        for _, gpus in buckets:
+            for g in sorted(gpus):
+                picked.append(g)
+                if len(picked) == k:
+                    return picked
+        return picked
 
     def consolidated_pick(self, candidates: List[int], k: int) -> List[int]:
         """Pick ``k`` GPUs from ``candidates`` packed onto as few servers as
@@ -195,13 +263,17 @@ class ClusterState:
             by_server.setdefault(self.server_of(g), []).append(g)
         # Prefer servers with the most candidate GPUs; stable by server id.
         order = sorted(by_server.items(), key=lambda kv: (-len(kv[1]), kv[0]))
-        picked: List[int] = []
-        for _, gpus in order:
-            for g in sorted(gpus):
-                picked.append(g)
-                if len(picked) == k:
-                    return picked
-        return picked  # may be < k; caller checks
+        return self._pick_from_buckets(order, k)
+
+    def consolidated_pick_free(self, k: int) -> List[int]:
+        """``consolidated_pick(free_gpus(), k)`` off the per-server free
+        index: O(servers log servers + k log k) instead of re-bucketing
+        every free GPU on each call."""
+        order = sorted(
+            ((sid, gpus) for sid, gpus in enumerate(self._free_by_server)
+             if gpus),
+            key=lambda kv: (-len(kv[1]), kv[0]))
+        return self._pick_from_buckets(order, k)
 
     def allocate(self, jid: int, gpus: FrozenSet[int]) -> None:
         for g in gpus:
@@ -209,6 +281,12 @@ class ClusterState:
             if len(occ) >= self.max_jobs_per_gpu:
                 raise RuntimeError(f"GPU {g} already holds {occ}")
             occ.append(jid)
+            if len(occ) == 1:
+                self._free.discard(g)
+                self._free_by_server[self.server_of(g)].discard(g)
+                self._mark_single(g, jid)
+            elif len(occ) == 2:
+                self._unmark_single(g)
         self._version += 1
 
     def release(self, jid: int, gpus: FrozenSet[int]) -> None:
@@ -217,6 +295,13 @@ class ClusterState:
             if jid not in occ:
                 raise RuntimeError(f"GPU {g} does not hold job {jid}")
             occ.remove(jid)
+            if not occ:
+                self._unmark_single(g)
+                self._free.add(g)
+                self._free_by_server[self.server_of(g)].add(g)
+            elif len(occ) == 1:
+                # the surviving tenant becomes the sole owner
+                self._mark_single(g, occ[0])
         self._version += 1
 
     def co_runners(self, job: Job) -> Set[int]:

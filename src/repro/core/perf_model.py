@@ -78,6 +78,23 @@ class PerfParams:
         overlap_tail = (tc ** self.delta + tn ** self.delta) ** (1.0 / self.delta)
         return (accum_steps - 1) * tc + overlap_tail
 
+    def t_iter_sub(self, batch: float, sub_batch: float) -> float:
+        """Eq. 7 at an explicit per-GPU sub-batch ``sub_batch``. When
+        ``sub_batch`` does not divide ``batch`` the final micro-batch
+        absorbs the remainder (``batch - (s-1)*sub_batch`` samples), so
+        the *effective* batch — and hence convergence — is preserved for
+        every candidate, not just exact divisors. For divisors this is
+        identical to ``t_iter(batch, batch // sub_batch)``."""
+        if sub_batch <= 0:
+            raise ValueError(f"sub_batch must be positive, got {sub_batch}")
+        s = max(1, math.ceil(batch / sub_batch))
+        last = batch - (s - 1) * sub_batch
+        tc = self.t_comp(sub_batch)
+        tn = self.t_comm()
+        tail = (self.t_comp(last) ** self.delta
+                + tn ** self.delta) ** (1.0 / self.delta)
+        return (s - 1) * tc + tail
+
     def throughput(self, batch: float, accum_steps: int = 1) -> float:
         return batch / self.t_iter(batch, accum_steps)
 
@@ -97,6 +114,20 @@ def ring_allreduce_bytes(param_bytes: float, n_workers: int) -> float:
     if n_workers <= 1:
         return 0.0
     return 2.0 * param_bytes * (n_workers - 1) / n_workers
+
+
+def t_iter_at_workers(p: PerfParams, batch: float, accum_steps: int,
+                      n_workers: int) -> float:
+    """Physical iteration time of Eq. 7 re-evaluated at ``n_workers``
+    ring-all-reduce participants (latency term grows with log2(n), the
+    bandwidth term with the ring payload). The single elastic-rescaling
+    formula shared by ``Job.base_t_iter`` and ``PolluxLike._rate``."""
+    sub = batch / accum_steps
+    tc = p.t_comp(sub)
+    tn = (p.alpha_comm * max(1, math.ceil(math.log2(max(2, n_workers))))
+          + p.beta_comm * ring_allreduce_bytes(p.param_bytes, n_workers))
+    d = p.delta
+    return (accum_steps - 1) * tc + (tc ** d + tn ** d) ** (1.0 / d)
 
 
 def derive_perf_params(

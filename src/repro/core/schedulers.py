@@ -12,25 +12,39 @@
 """
 from __future__ import annotations
 
-import math
 from bisect import insort
 from typing import Dict, List, Optional, Tuple
 
 from .batch_scaling import best_sharing_config, candidate_sub_batches
 from .job import ClusterState, Job, JobState
-from .simulator import SchedulerBase, Simulator
+from .perf_model import t_iter_at_workers
+from .simulator import HAS_BATCHED_DECISIONS, SchedulerBase, Simulator
+
+if HAS_BATCHED_DECISIONS:               # vectorized decision core (numpy)
+    import numpy as np
+    from .pair_batch import DonorBatch, best_sharing_configs
 
 
 # ---------------------------------------------------------------------- #
 # helpers
 # ---------------------------------------------------------------------- #
 def solo_sub_batch(job: Job, capacity: float) -> Optional[int]:
-    """Largest power-of-two sub-batch that fits device memory alone
-    (gradient accumulation supplies the rest)."""
+    """Largest candidate sub-batch that fits device memory alone
+    (gradient accumulation supplies the rest). Memoized per (job,
+    capacity): ``_start_exclusive`` re-asks for the same head-of-line
+    job on every scheduling pass."""
+    memo = job._solo_sub_memo
+    try:
+        return memo[capacity]
+    except KeyError:
+        pass
+    sub = None
     for b in candidate_sub_batches(job.batch):
         if job.perf.fits(b, capacity):
-            return b
-    return None
+            sub = b
+            break
+    memo[capacity] = sub
+    return sub
 
 
 def shared_sub_batch(job: Job, capacity: float, other_mem: float) -> Optional[int]:
@@ -64,10 +78,12 @@ class _StaticOrder:
         self._requeue_safe = requeue_safe
         self._entries: List[tuple] = []   # (key, jid, job, preemptions)
         self._tracked: set = set()
+        self._compact_backoff = 0   # calls to skip after a no-op compaction
 
     def reset(self) -> None:
         self._entries.clear()
         self._tracked.clear()
+        self._compact_backoff = 0
 
     def _rekey(self) -> List[tuple]:
         key_fn = self._key_fn
@@ -103,23 +119,31 @@ class _StaticOrder:
                         break
                     out.append(job)
         if 2 * len(out) < len(entries):
-            keep = [e for e in entries
-                    if e[2].state is not JobState.FINISHED]
-            if len(keep) < len(entries):
-                self._entries = keep
-                self._tracked = {e[1] for e in keep}
+            if self._compact_backoff > 0:
+                self._compact_backoff -= 1
+            else:
+                keep = [e for e in entries
+                        if e[2].state is not JobState.FINISHED]
+                if len(keep) < len(entries):
+                    self._entries = keep
+                    self._tracked = {e[1] for e in keep}
+                else:
+                    # nothing terminal to drop (entries are mostly
+                    # RUNNING); back off so the no-op rescan amortizes
+                    # to O(1) per call instead of O(entries)
+                    self._compact_backoff = max(8, len(entries) >> 3)
         return out
 
 
 def _start_exclusive(sim: Simulator, job: Job) -> bool:
-    free = sim.cluster.free_gpus()
+    cluster = sim.cluster
     want = job.alloc_gpus or job.gpus
-    if len(free) < want:
+    if cluster.n_free < want:
         return False
-    sub = solo_sub_batch(job, sim.cluster.gpu_capacity_bytes)
+    sub = solo_sub_batch(job, cluster.gpu_capacity_bytes)
     if sub is None:
         raise RuntimeError(f"job {job.jid} cannot fit memory even at b=1")
-    gpus = sim.cluster.consolidated_pick(free, want)
+    gpus = cluster.consolidated_pick_free(want)
     sim.start_job(job, gpus, sub_batch=sub)
     return True
 
@@ -272,14 +296,8 @@ class PolluxLike(SchedulerBase):
         if n <= 0:
             val = 0.0
         else:
-            p = job.perf
-            sub = job.batch / job.accum_steps
-            tc = p.t_comp(sub)
-            tn = (p.alpha_comm * max(1, math.ceil(math.log2(max(2, n))))
-                  + p.beta_comm * 2.0 * p.param_bytes * (n - 1) / n)
-            d = p.delta
-            t_phys = ((job.accum_steps - 1) * tc
-                      + (tc ** d + tn ** d) ** (1 / d))
+            t_phys = t_iter_at_workers(job.perf, job.batch,
+                                       job.accum_steps, n)
             val = (n / job.gpus) / t_phys
         self._rate_cache[key] = val
         return val
@@ -367,12 +385,11 @@ class PolluxLike(SchedulerBase):
             n = alloc.get(j.jid, 0)
             if n <= 0:
                 continue
-            free = sim.cluster.free_gpus()
-            if len(free) < n:
+            if sim.cluster.n_free < n:
                 continue
             j.alloc_gpus = n
             sub = solo_sub_batch(j, sim.cluster.gpu_capacity_bytes)
-            gpus = sim.cluster.consolidated_pick(free, n)
+            gpus = sim.cluster.consolidated_pick_free(n)
             sim.start_job(j, gpus, sub_batch=sub)
 
 
@@ -421,17 +438,113 @@ class SJF_FFS(SchedulerBase):
 
 # ---------------------------------------------------------------------- #
 class SJF_BSBF(SchedulerBase):
-    """Algorithm 1 — Shortest Job First with Best Sharing Benefit First."""
+    """Algorithm 1 — Shortest Job First with Best Sharing Benefit First.
+
+    Two decision paths with identical outcomes (pinned by
+    ``tests/test_decision_equivalence.py``):
+
+    * ``batched`` (default) — one :func:`repro.core.pair_batch.
+      best_sharing_configs` call evaluates Algorithm 2 against every
+      donor as NumPy array ops; the donor batch is reused across the
+      pending queue until a placement changes the donor set.
+    * ``scalar`` — the original per-(pending, donor)
+      :func:`best_sharing_config` loop, kept as the reference.
+
+    The path comes from the constructor, else the Simulator's
+    ``decision_path`` (``REPRO_SIM_DECISION`` env, default batched).
+    """
 
     name = "sjf-bsbf"
+    progress_scope = "donors"   # schedule() only reads donors' progress
 
-    def __init__(self) -> None:
+    def __init__(self, decision: Optional[str] = None) -> None:
         self._order = _StaticOrder(lambda j: j.expected_remaining_time)
+        if decision not in (None, "batched", "scalar"):
+            raise ValueError(
+                f"unknown decision path {decision!r}; "
+                f"choose from ['batched', 'scalar']")
+        if decision == "batched" and not HAS_BATCHED_DECISIONS:
+            raise ValueError(
+                "decision='batched' requires numpy (repro.core.pair_batch)")
+        self.decision = decision
+        # (cluster version, DonorBatch): donor membership / memory /
+        # iteration times only change with placements, so the batch (and
+        # its per-model xi cache) survives across scheduling passes
+        self._donor_cache: Optional[tuple] = None
 
     def reset(self) -> None:
         self._order.reset()
+        self._donor_cache = None
 
     def schedule(self, sim: Simulator) -> None:
+        # sim.decision_path is already availability-resolved; a bare sim
+        # without the attribute falls back to whatever can actually run
+        path = self.decision or getattr(
+            sim, "decision_path",
+            "batched" if HAS_BATCHED_DECISIONS else "scalar")
+        if path == "batched":
+            self._schedule_batched(sim)
+        else:
+            self._schedule_scalar(sim)
+
+    # -- batched decision path ----------------------------------------- #
+    def _schedule_batched(self, sim: Simulator) -> None:
+        cluster = sim.cluster
+        cap = cluster.gpu_capacity_bytes
+        jobs = sim.jobs
+        occupancy = cluster.occupancy
+        donor_batch = None   # rebuilt after any placement changes donors
+        for job in self._order.order(sim.pending):
+            # Lines 6-8: enough free GPUs -> exclusive consolidated pick.
+            if _start_exclusive(sim, job):
+                donor_batch = None
+                continue
+            free = cluster.free_gpus()
+            if len(free) + cluster.n_single < job.gpus:
+                continue  # Line 9 fails: stay pending
+            # Lines 10-13: Algorithm 2 against every donor in one shot.
+            if donor_batch is None:
+                cached = self._donor_cache
+                if cached is not None and cached[0] == cluster.version:
+                    donor_batch = cached[1]
+                    donor_batch.refresh_progress()
+                else:
+                    donor_batch = DonorBatch(
+                        [jobs[j] for j in sorted(cluster.donor_jids())])
+                    self._donor_cache = (cluster.version, donor_batch)
+            res = best_sharing_configs(job, donor_batch,
+                                       sim.interference, cap)
+            idx = np.flatnonzero(res.share)
+            if idx.size == 0:
+                continue  # SF False for all pairs: defer (stay in pool)
+            # Line 14: donors by pair-JCT ascending, ties by jid (the
+            # scalar sort key).
+            order = idx[np.lexsort((donor_batch.jids[idx],
+                                    res.avg_jct[idx]))]
+            # Lines 15-17: take donors' GPUs until the request is met
+            # (shared GPUs first — they pace the job — then free ones).
+            chosen: List[int] = []
+            sub = job.batch
+            for i in order:
+                if len(chosen) >= job.gpus:
+                    break
+                run = donor_batch.donors[i]
+                for g in sorted(run.placement):
+                    if len(occupancy[g]) == 1:
+                        chosen.append(g)
+                        if len(chosen) >= job.gpus:
+                            break
+                sub = min(sub, int(res.sub_batch[i]))
+            if len(chosen) < job.gpus:
+                chosen.extend(free[: job.gpus - len(chosen)])
+            if len(chosen) < job.gpus:
+                continue
+            chosen = chosen[:job.gpus]
+            sim.start_job(job, chosen, sub_batch=sub)
+            donor_batch = None
+
+    # -- scalar reference path ----------------------------------------- #
+    def _schedule_scalar(self, sim: Simulator) -> None:
         cap = sim.cluster.gpu_capacity_bytes
         for job in self._order.order(sim.pending):
             # Lines 6-8: enough free GPUs -> exclusive consolidated pick.

@@ -21,6 +21,12 @@ from .engine import ENGINES, SimResults, make_engine
 from .interference import InterferenceModel
 from .job import ClusterState, Job
 
+try:   # the vectorized decision core needs numpy
+    from . import pair_batch as _pair_batch   # noqa: F401
+    HAS_BATCHED_DECISIONS = True
+except ModuleNotFoundError:   # pragma: no cover - numpy-less env
+    HAS_BATCHED_DECISIONS = False
+
 __all__ = ["SchedulerBase", "SimResults", "Simulator"]
 
 
@@ -34,6 +40,7 @@ class Simulator:
         restart_penalty: float = 30.0,
         max_events: int = 2_000_000,
         engine: Optional[str] = None,
+        decision: Optional[str] = None,
     ) -> None:
         self.cluster = cluster
         self.jobs: Dict[int, Job] = {j.jid: j for j in jobs}
@@ -44,6 +51,19 @@ class Simulator:
         self.max_events = max_events
         self.engine_name = (engine or os.environ.get("REPRO_SIM_ENGINE")
                             or "heap")
+        # sharing-decision path: "batched" (vectorized Algorithm 2 over
+        # all donors, the default) or "scalar" (the per-pair reference)
+        self.decision_path = (decision
+                              or os.environ.get("REPRO_SIM_DECISION")
+                              or "batched")
+        if self.decision_path not in ("batched", "scalar"):
+            raise ValueError(
+                f"unknown decision path {self.decision_path!r}; "
+                f"choose from ['batched', 'scalar']")
+        if self.decision_path == "batched" and not HAS_BATCHED_DECISIONS:
+            # resolve to what will actually run, so sweep rows and bench
+            # artifacts never claim "batched" for a scalar run
+            self.decision_path = "scalar"
         self.engine = make_engine(self.engine_name, self)
 
     # ------------------------------------------------------------------ #
@@ -94,6 +114,12 @@ class SchedulerBase:
     # static job fields and the pending queue can set this False so the
     # heap engine skips the per-event accrual sweep (DESIGN.md §9).
     reads_running_progress: bool = True
+    # Which running jobs the pre-schedule accrual must cover: "all"
+    # (Tiresias/SRSF read every job's attained/remaining service) or
+    # "donors" (Algorithm 1 only reads the remaining work of jobs owning
+    # single-occupancy GPUs). Progress accrual is order-insensitive, so
+    # narrowing the sweep leaves results unchanged (DESIGN.md §10).
+    progress_scope: str = "all"
 
     def reset(self) -> None:
         """Called by the engine when a run starts. Stateful schedulers

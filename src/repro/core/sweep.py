@@ -26,7 +26,7 @@ from .interference import InterferenceModel, paper_interference_model
 from .job import ClusterState
 from .schedulers import ALL_POLICIES, make_scheduler
 from .simulator import Simulator
-from .trace import physical_trace, simulation_trace
+from .trace import datacenter_trace, physical_trace, simulation_trace
 
 __all__ = [
     "ScenarioSpec", "grid", "normalize_policy", "run_scenario",
@@ -56,14 +56,19 @@ class ScenarioSpec:
     policy: str
     n_jobs: int = 240
     seed: int = 0
+    # trace="datacenter" reads load_scale as a multiplier on the 0.7
+    # target cluster utilization of repro.core.trace.datacenter_trace
     load_scale: float = 1.0
-    trace: str = "simulation"          # "simulation" | "physical"
+    trace: str = "simulation"    # "simulation" | "physical" | "datacenter"
     n_servers: int = 16
     gpus_per_server: int = 4
     capacity_gb: float = 11.0
     global_xi: Optional[float] = None  # Fig. 6b style xi injection
     # None lets the Simulator resolve (REPRO_SIM_ENGINE env, else heap)
     engine: Optional[str] = None
+    # sharing-decision path: None -> Simulator default (REPRO_SIM_DECISION
+    # env, else the vectorized "batched" core); "scalar" for the reference
+    decision: Optional[str] = None
     collect: Tuple[str, ...] = ()      # extra per-job metrics (below)
     tag: str = ""                      # free-form grouping label
 
@@ -131,6 +136,11 @@ def _build_jobs(spec: ScenarioSpec):
     if spec.trace == "simulation":
         return simulation_trace(n_jobs=spec.n_jobs, seed=spec.seed,
                                 load_scale=spec.load_scale)
+    if spec.trace == "datacenter":
+        return datacenter_trace(
+            n_jobs=spec.n_jobs, seed=spec.seed,
+            n_gpus=spec.n_servers * spec.gpus_per_server,
+            utilization=0.7 * spec.load_scale)
     raise ValueError(f"unknown trace kind {spec.trace!r}")
 
 
@@ -150,12 +160,14 @@ def run_scenario(spec: ScenarioSpec) -> Dict:
                     if spec.global_xi is not None
                     else paper_interference_model())
     sim = Simulator(cluster, jobs, make_scheduler(spec.policy),
-                    interference=interference, engine=spec.engine)
+                    interference=interference, engine=spec.engine,
+                    decision=spec.decision)
     t0 = time.time()
     res = sim.run()
     row = dict(asdict(spec))
     row["n_jobs"] = len(jobs)   # physical traces fix their own job count
     row["engine"] = sim.engine_name   # record the resolved engine
+    row["decision"] = sim.decision_path   # record the resolved path
     row["collect"] = list(spec.collect)
     row["events"] = res.events
     row["summary"] = res.summary()
@@ -226,7 +238,7 @@ def write_json(rows: Sequence[Dict], path: str) -> str:
 
 
 _CSV_FIELDS = ("tag", "trace", "policy", "n_jobs", "seed", "load_scale",
-               "global_xi", "engine", "events")
+               "global_xi", "engine", "decision", "events")
 
 
 def write_csv(rows: Sequence[Dict], path: str) -> str:

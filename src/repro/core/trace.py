@@ -1,9 +1,13 @@
 """Workload generation following the Microsoft/Philly trace shape used by
 the paper (Section VI-A): GPU-demand and iteration-count distributions,
 Poisson arrivals, model mix over the six Pollux tasks (paper-faithful) or
-the ten assigned architectures (TPU-cluster mode)."""
+the ten assigned architectures (TPU-cluster mode); plus a
+datacenter-scale generator (:func:`datacenter_trace`) with a
+heavy-tailed demand distribution for the Philly/Helios-regime
+scheduling benchmarks (thousands of jobs, thousands of GPUs)."""
 from __future__ import annotations
 
+import math
 import random
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
@@ -31,7 +35,6 @@ class TraceConfig:
 
 def _sample_iters(rng: random.Random, cfg: TraceConfig) -> int:
     if cfg.log_uniform_iters:
-        import math
         lo, hi = math.log(cfg.min_iters), math.log(cfg.max_iters)
         return int(round(math.exp(rng.uniform(lo, hi))))
     return rng.randint(cfg.min_iters, cfg.max_iters)
@@ -87,7 +90,6 @@ def physical_trace(seed: int = 0) -> List[Job]:
         t += rng.expovariate(1.0 / 30.0)
         name = rng.choice(names)
         prof = PAPER_TASK_PROFILES[name]
-        import math
         iters = int(round(math.exp(rng.uniform(math.log(100),
                                                math.log(5000)))))
         jobs.append(Job(
@@ -95,6 +97,68 @@ def physical_trace(seed: int = 0) -> List[Job]:
             batch=prof.default_batch,
             perf=prof.perf_params(gpus, GPU_2080TI),
         ))
+    return jobs
+
+
+# Heavy-tailed Philly/Helios-like demand mix: most jobs are small, a
+# long tail of 32-128 GPU jobs carries a large share of the GPU-hours.
+DATACENTER_GPU_DEMAND: Sequence[tuple[int, float]] = (
+    (1, 0.32), (2, 0.22), (4, 0.17), (8, 0.12), (16, 0.08),
+    (32, 0.05), (64, 0.03), (128, 0.01))
+
+
+def datacenter_trace(
+    n_jobs: int = 5000,
+    seed: int = 0,
+    n_gpus: int = 1024,
+    utilization: float = 0.7,
+    gpu_demand: Sequence[tuple[int, float]] = DATACENTER_GPU_DEMAND,
+    min_iters: int = 200,
+    max_iters: int = 50000,
+    tasks: Optional[Dict[str, TaskProfile]] = None,
+    hw: HardwareSpec = GPU_2080TI,
+) -> List[Job]:
+    """Datacenter-scale workload (configurable up to ~10k jobs / 4096
+    GPUs): heavy-tailed GPU demand, log-uniform iteration counts, and
+    Poisson arrivals whose rate is *derived from the target cluster
+    utilization* — the offered load (solo GPU-seconds per wall-second)
+    is ``utilization * n_gpus`` whatever the cluster size, so one knob
+    sweeps the {64, 256, 1024, 4096}-GPU scenarios of
+    ``benchmarks/sched_decision_bench.py``. Fully determined by the
+    arguments (same seed -> same trace)."""
+    rng = random.Random(seed)
+    tasks = tasks or PAPER_TASK_PROFILES
+    names = sorted(tasks)
+    lo, hi = math.log(min_iters), math.log(max_iters)
+    specs = []
+    total_gpu_seconds = 0.0
+    for _ in range(n_jobs):
+        name = rng.choice(names)
+        prof = tasks[name]
+        r = rng.random()
+        acc = 0.0
+        gpus = gpu_demand[-1][0]
+        for g, p in gpu_demand:
+            acc += p
+            if r <= acc:
+                gpus = g
+                break
+        gpus = min(gpus, n_gpus)
+        iters = int(round(math.exp(rng.uniform(lo, hi))))
+        perf = prof.perf_params(gpus, hw)
+        est = perf.t_iter(prof.default_batch) * iters
+        total_gpu_seconds += gpus * est
+        specs.append((name, gpus, iters, perf, prof.default_batch))
+    # arrival horizon that offers `utilization * n_gpus` GPU-seconds of
+    # solo work per wall-second
+    horizon = total_gpu_seconds / (n_gpus * max(utilization, 1e-9))
+    mean_interarrival = horizon / n_jobs
+    jobs: List[Job] = []
+    t = 0.0
+    for jid, (name, gpus, iters, perf, batch) in enumerate(specs):
+        t += rng.expovariate(1.0 / mean_interarrival)
+        jobs.append(Job(jid=jid, model=name, arrival=t, gpus=gpus,
+                        iters=float(iters), batch=batch, perf=perf))
     return jobs
 
 

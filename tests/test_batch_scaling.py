@@ -25,6 +25,43 @@ def test_candidate_sub_batches():
     assert candidate_sub_batches(6) == [6, 3, 2, 1]
 
 
+def test_non_divisor_sub_batch_preserves_effective_batch():
+    """Regression: with B=3, b=2 the old code derived s=round(3/2)=2 and
+    priced the iteration as if it ran s*b=4 samples — silently changing
+    the effective batch. Now s=ceil(B/b) and the final micro-batch
+    absorbs the remainder, so every candidate executes exactly B
+    samples."""
+    import math
+    run = mk_job(0, batch=16)
+    run.sub_batch = 16
+    for B in (3, 5, 6, 7, 12, 100):
+        new = mk_job(1, batch=B, mem_base=1 * GB, mem_per_sample=0.01 * GB)
+        interf = InterferenceModel(global_xi=1.05)
+        cfg = best_sharing_config(run, new, interf, gpu_capacity_bytes=64 * GB)
+        s, b = cfg.accum_steps, cfg.sub_batch
+        assert s == max(1, math.ceil(B / b))
+        # executed samples: (s-1) full micro-batches + the remainder
+        assert (s - 1) * b + (B - (s - 1) * b) == B
+        assert B - (s - 1) * b >= 1   # final micro-batch is non-empty
+
+
+def test_t_iter_sub_final_microbatch_aware():
+    """t_iter_sub prices the remainder micro-batch at its true size and
+    agrees exactly with Eq. 7 for exact divisors."""
+    job = mk_job(0, batch=3)
+    p = job.perf
+    # B=3, b=2 -> steps of [2, 1]: one full compute step plus a tail that
+    # overlaps comm with the 1-sample remainder step
+    expect = p.t_comp(2) + (p.t_comp(1) ** p.delta
+                            + p.t_comm() ** p.delta) ** (1.0 / p.delta)
+    assert p.t_iter_sub(3, 2) == pytest.approx(expect, rel=1e-12)
+    # divisors collapse to the even-split Eq. 7
+    assert p.t_iter_sub(32, 8) == p.t_iter(32, 4)
+    assert p.t_iter_sub(32, 32) == p.t_iter(32, 1)
+    with pytest.raises(ValueError):
+        p.t_iter_sub(32, 0)
+
+
 def test_memory_forces_accumulation():
     # 11 GB GPU: running job uses 2GB + 16*0.2=5.2GB; new job (base 2GB)
     # can only fit a few samples -> Algorithm 2 must pick b < B.

@@ -1,0 +1,120 @@
+"""Full-trace pin for the vectorized decision core: every policy must
+produce *identical* ``SimResults.summary()`` (and event counts) whether
+SJF-BSBF runs the batched NumPy path or the scalar per-pair reference —
+the batched core mirrors the scalar arithmetic operation-for-operation,
+so the pin is exact equality, tighter than the 1e-9 acceptance bound."""
+import pytest
+
+from repro.core import (ClusterState, InterferenceModel, Simulator,
+                        datacenter_trace, make_scheduler,
+                        paper_interference_model, simulation_trace)
+from repro.core.schedulers import ALL_POLICIES
+
+GB = 2 ** 30
+
+
+def _run(policy, decision, interference=None, jobs=None):
+    jobs = jobs if jobs is not None else simulation_trace(n_jobs=70, seed=5)
+    cluster = ClusterState(n_servers=16, gpus_per_server=4,
+                           gpu_capacity_bytes=11 * GB)
+    sim = Simulator(cluster, jobs, make_scheduler(policy),
+                    interference=interference or paper_interference_model(),
+                    decision=decision)
+    assert sim.decision_path == decision
+    return sim.run()
+
+
+def _assert_identical(a, b):
+    assert a.events == b.events
+    assert a.summary() == b.summary()
+    for ja, jb in zip(sorted(a.jobs, key=lambda j: j.jid),
+                      sorted(b.jobs, key=lambda j: j.jid)):
+        assert ja.finish_time == jb.finish_time
+        assert ja.sub_batch == jb.sub_batch
+        assert ja.placement == jb.placement
+
+
+@pytest.mark.parametrize("policy", sorted(ALL_POLICIES))
+def test_batched_matches_scalar_paper_model(policy):
+    _assert_identical(_run(policy, "scalar"), _run(policy, "batched"))
+
+
+@pytest.mark.parametrize("interference", [
+    InterferenceModel(),                  # structural fallback
+    InterferenceModel(global_xi=1.4),     # Fig. 6b style injection
+], ids=["structural", "global-xi"])
+def test_batched_matches_scalar_other_xi_regimes(interference):
+    _assert_identical(_run("sjf-bsbf", "scalar", interference=interference),
+                      _run("sjf-bsbf", "batched", interference=interference))
+
+
+def test_batched_matches_scalar_datacenter_trace():
+    def run(decision):
+        jobs = datacenter_trace(n_jobs=150, seed=3, n_gpus=64)
+        cluster = ClusterState(n_servers=16, gpus_per_server=4,
+                               gpu_capacity_bytes=11 * GB)
+        sim = Simulator(cluster, jobs, make_scheduler("sjf-bsbf"),
+                        interference=paper_interference_model(),
+                        decision=decision)
+        return sim.run()
+
+    _assert_identical(run("scalar"), run("batched"))
+
+
+def test_scan_heap_agree_on_non_divisor_sub_batch():
+    """Both engines must price a co-runner's iteration time with the
+    final-microbatch-aware Eq. 7 when memory pressure forces a
+    non-divisor sub-batch (regression: ScanEngine used the even-split
+    form, diverging from HeapEngine under the structural xi model)."""
+    from repro.core import Job, PerfParams
+
+    def mk(jid, model):
+        # batch=100 at 0.5 GB/sample on an 11 GB device: candidate 25
+        # overflows (13.5 GB) so the solo fit is 13 — a non-divisor of
+        # 100 (ceil-halving candidates are 100, 50, 25, 13, 7, 4, 2, 1)
+        perf = PerfParams(alpha_comp=2e-3, beta_comp=5e-3, alpha_comm=1e-4,
+                          beta_comm=8e-10, msg_bytes=4e8,
+                          mem_base=1.0 * GB, mem_per_sample=0.5 * GB)
+        return Job(jid=jid, model=model, arrival=float(jid), gpus=2,
+                   iters=400.0, batch=100, perf=perf)
+
+    def run(engine):
+        jobs = [mk(0, "a"), mk(1, "b"), mk(2, "a"), mk(3, "b")]
+        cluster = ClusterState(n_servers=1, gpus_per_server=2,
+                               gpu_capacity_bytes=11 * GB)
+        sim = Simulator(cluster, jobs, make_scheduler("sjf-ffs"),
+                        interference=InterferenceModel(),  # structural xi
+                        engine=engine)
+        res = sim.run()
+        subs = {j.jid: j.sub_batch for j in res.jobs}
+        assert any(j.batch % s for j, s in
+                   ((j, j.sub_batch) for j in res.jobs)), \
+            "scenario must actually exercise a non-divisor sub-batch"
+        return res, subs
+
+    res_scan, subs_scan = run("scan")
+    res_heap, subs_heap = run("heap")
+    assert subs_scan == subs_heap
+    assert res_scan.events == res_heap.events
+    for key, val in res_scan.summary().items():
+        assert res_heap.summary()[key] == pytest.approx(val, rel=1e-9), key
+
+
+def test_default_decision_is_batched(monkeypatch):
+    monkeypatch.delenv("REPRO_SIM_DECISION", raising=False)
+    jobs = simulation_trace(n_jobs=8, seed=0)
+    cluster = ClusterState(n_servers=4, gpus_per_server=4)
+    sim = Simulator(cluster, jobs, make_scheduler("sjf-bsbf"))
+    assert sim.decision_path == "batched"
+
+
+def test_decision_env_and_validation(monkeypatch):
+    jobs = simulation_trace(n_jobs=8, seed=0)
+    cluster = ClusterState(n_servers=4, gpus_per_server=4)
+    monkeypatch.setenv("REPRO_SIM_DECISION", "scalar")
+    sim = Simulator(cluster, jobs, make_scheduler("sjf-bsbf"))
+    assert sim.decision_path == "scalar"
+    with pytest.raises(ValueError, match="unknown decision path"):
+        Simulator(ClusterState(n_servers=4, gpus_per_server=4),
+                  simulation_trace(n_jobs=8, seed=0),
+                  make_scheduler("sjf-bsbf"), decision="simd")

@@ -1,0 +1,164 @@
+"""Batched-vs-scalar equivalence for the vectorized sharing-decision
+core: ``repro.core.pair_batch`` must reproduce the scalar Algorithm-2
+reference (``best_sharing_config``) decision-for-decision — share flag,
+chosen sub-batch, accumulation count, and pair-average JCT — across xi
+regimes (global override, two-way table, one-way table, structural
+fallback), non-power-of-two batches, and infeasible pairs."""
+import math
+import random
+
+import pytest
+
+from _hypothesis_compat import HealthCheck, given, settings, st
+
+from repro.core.batch_scaling import best_sharing_config
+from repro.core.interference import InterferenceModel
+from repro.core.job import Job
+from repro.core.pair_batch import (DonorBatch, best_sharing_config_batched,
+                                   best_sharing_configs,
+                                   job_candidate_table)
+from repro.core.perf_model import PerfParams
+
+GB = 2 ** 30
+TOL = 1e-9
+
+
+def mk_job(jid, model="a", batch=32, iters=1000.0, mem_base=2 * GB,
+           mem_per_sample=0.2 * GB, alpha=2e-3, beta=5e-3):
+    perf = PerfParams(alpha_comp=alpha, beta_comp=beta, alpha_comm=1e-4,
+                      beta_comm=8e-10, msg_bytes=4e8, mem_base=mem_base,
+                      mem_per_sample=mem_per_sample)
+    return Job(jid=jid, model=model, arrival=0.0, gpus=4, iters=iters,
+               batch=batch, perf=perf)
+
+
+def _rand_job(rng, jid, model):
+    job = mk_job(
+        jid, model=model,
+        batch=rng.choice([1, 3, 5, 6, 7, 16, 32, 48, 100]),
+        iters=rng.uniform(10.0, 5000.0),
+        mem_base=rng.uniform(0.5, 8.0) * GB,
+        mem_per_sample=rng.uniform(0.01, 0.4) * GB,
+        alpha=rng.uniform(1e-4, 5e-3), beta=rng.uniform(1e-4, 1e-2))
+    return job
+
+
+def _rand_interference(rng, regime, run_model, new_model):
+    m = InterferenceModel()
+    if regime == "global":
+        m.global_xi = rng.uniform(1.0, 5.0)
+    elif regime == "two-way":
+        m.set_pair(run_model, new_model,
+                   rng.uniform(1.0, 4.0), rng.uniform(1.0, 4.0))
+    elif regime == "one-way":
+        m.table[(run_model, new_model)] = (rng.uniform(1.0, 4.0),
+                                           rng.uniform(1.0, 4.0))
+    return m   # "structural": empty table
+
+
+def _assert_config_equal(a, b):
+    assert a.share == b.share
+    assert a.sub_batch == b.sub_batch
+    assert a.accum_steps == b.accum_steps
+    if math.isinf(a.avg_jct):
+        assert math.isinf(b.avg_jct)
+        assert a.decision is None and b.decision is None
+        return
+    assert b.avg_jct == pytest.approx(a.avg_jct, rel=TOL, abs=TOL)
+    assert b.xi_run == pytest.approx(a.xi_run, rel=TOL)
+    assert b.xi_new == pytest.approx(a.xi_new, rel=TOL)
+    assert b.decision.kappa == pytest.approx(a.decision.kappa,
+                                             rel=TOL, abs=TOL)
+    assert b.decision.jct_a == pytest.approx(a.decision.jct_a, rel=TOL)
+    assert b.decision.jct_b == pytest.approx(a.decision.jct_b, rel=TOL)
+
+
+@pytest.mark.parametrize("regime",
+                         ["global", "two-way", "one-way", "structural"])
+def test_single_donor_matches_scalar_randomized(regime):
+    rng = random.Random(hash(regime) & 0xFFFF)
+    for _ in range(150):
+        run = _rand_job(rng, 0, rng.choice("ab"))
+        run.sub_batch = rng.choice([run.batch, max(1, run.batch // 2)])
+        run.iters_done = rng.uniform(0.0, run.iters)
+        new = _rand_job(rng, 1, rng.choice("ab"))
+        interf = _rand_interference(rng, regime, run.model, new.model)
+        cap = rng.uniform(6.0, 24.0) * GB
+        scalar = best_sharing_config(run, new, interf, cap)
+        batched = best_sharing_config_batched(run, new, interf, cap)
+        _assert_config_equal(scalar, batched)
+
+
+def test_multi_donor_mixed_regimes_match_scalar():
+    """One DonorBatch mixing fixed-xi donors (which take the scalar
+    first-feasible shortcut) with structural donors (full grid argmin)."""
+    rng = random.Random(42)
+    new = _rand_job(rng, 99, "x")
+    interf = InterferenceModel()
+    interf.set_pair("fixed", "x", 1.3, 1.2)          # two-way: fixed donor
+    interf.table[("oneway", "x")] = (1.8, 1.8)       # one-way hit
+    donors = []
+    for i, model in enumerate(["fixed", "oneway", "structural", "fixed",
+                               "structural", "oneway"]):
+        d = _rand_job(rng, i, model)
+        d.sub_batch = d.batch
+        d.iters_done = rng.uniform(0.0, d.iters)
+        donors.append(d)
+    cap = 16 * GB
+    res = best_sharing_configs(new, DonorBatch(donors), interf, cap)
+    assert len(res.donors) == len(donors)
+    for i, donor in enumerate(donors):
+        _assert_config_equal(
+            best_sharing_config(donor, new, interf, cap), res.config(i))
+
+
+def test_infeasible_pair_matches_scalar_sentinel():
+    run = mk_job(0, mem_base=8 * GB)
+    run.sub_batch = run.batch
+    new = mk_job(1, mem_base=8 * GB)
+    interf = InterferenceModel(global_xi=1.1)
+    cfg = best_sharing_config_batched(run, new, interf, 11 * GB)
+    assert not cfg.share
+    assert cfg.decision is None
+    assert math.isinf(cfg.avg_jct)
+    assert cfg.sub_batch == new.batch and cfg.accum_steps == 1
+
+
+def test_empty_donor_batch():
+    new = mk_job(1)
+    res = best_sharing_configs(new, [], InterferenceModel(), 11 * GB)
+    assert len(res.donors) == 0
+    assert res.share.shape == (0,)
+
+
+def test_candidate_table_cached_on_job():
+    job = mk_job(0, batch=48)
+    bs, ss, t, mem = job_candidate_table(job)
+    assert job_candidate_table(job) is job._pair_table
+    assert list(bs) == [48, 24, 12, 6, 3, 2, 1]
+    # s = ceil(B / b), never round — the effective batch is preserved
+    assert all(s == math.ceil(48 / b) for b, s in zip(bs, ss))
+    assert all(tv > 0 for tv in t)
+    assert mem[0] > mem[-1]   # memory shrinks with the sub-batch
+
+
+pos_t = st.floats(1e-4, 1e-2)
+iters = st.floats(1.0, 5000.0)
+xi = st.floats(1.0, 6.0)
+batches = st.sampled_from([1, 3, 6, 7, 16, 32, 100])
+mem_gb = st.floats(0.5, 9.0)
+
+
+@given(batches, batches, iters, iters, xi, xi, mem_gb, mem_gb)
+@settings(max_examples=200, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_property_batched_equals_scalar(batch_r, batch_n, iters_r, iters_n,
+                                        xi_r, xi_n, mem_r, mem_n):
+    run = mk_job(0, batch=batch_r, iters=iters_r, mem_base=mem_r * GB)
+    run.sub_batch = batch_r
+    new = mk_job(1, batch=batch_n, iters=iters_n, mem_base=mem_n * GB)
+    interf = InterferenceModel()
+    interf.set_pair("a", "a", xi_r, xi_n)
+    scalar = best_sharing_config(run, new, interf, 11 * GB)
+    batched = best_sharing_config_batched(run, new, interf, 11 * GB)
+    _assert_config_equal(scalar, batched)

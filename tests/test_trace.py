@@ -2,8 +2,9 @@
 import pytest
 
 from repro.core.tasks import PAPER_TASK_PROFILES
-from repro.core.trace import (TraceConfig, generate_trace, physical_trace,
-                              simulation_trace)
+from repro.core.trace import (DATACENTER_GPU_DEMAND, TraceConfig,
+                              datacenter_trace, generate_trace,
+                              physical_trace, simulation_trace)
 
 
 def test_physical_trace_shape():
@@ -43,6 +44,35 @@ def test_iter_bounds():
     cfg = TraceConfig(n_jobs=200, seed=2, min_iters=100, max_iters=5000)
     for j in generate_trace(cfg):
         assert 100 <= j.iters <= 5000 * 1.01
+
+
+def test_datacenter_trace_shape_and_determinism():
+    a = datacenter_trace(n_jobs=400, seed=9, n_gpus=256)
+    b = datacenter_trace(n_jobs=400, seed=9, n_gpus=256)
+    assert [(j.model, j.arrival, j.gpus, j.iters) for j in a] == \
+           [(j.model, j.arrival, j.gpus, j.iters) for j in b]
+    demands = {g for g, _ in DATACENTER_GPU_DEMAND}
+    for j in a:
+        assert j.gpus in demands and j.gpus <= 256
+        assert 200 <= j.iters <= 50000 * 1.01
+    arr = [j.arrival for j in a]
+    assert arr == sorted(arr)
+    # the heavy tail is present at this sample size
+    assert any(j.gpus >= 32 for j in a)
+
+
+def test_datacenter_trace_demand_capped_at_cluster():
+    jobs = datacenter_trace(n_jobs=300, seed=1, n_gpus=16)
+    assert all(j.gpus <= 16 for j in jobs)
+
+
+def test_datacenter_trace_load_scales_arrival_rate():
+    """Same work, higher target utilization -> compressed arrivals."""
+    relaxed = datacenter_trace(n_jobs=200, seed=4, n_gpus=128,
+                               utilization=0.5)
+    loaded = datacenter_trace(n_jobs=200, seed=4, n_gpus=128,
+                              utilization=1.0)
+    assert loaded[-1].arrival < relaxed[-1].arrival
 
 
 def test_perf_params_scale_with_gpus():
