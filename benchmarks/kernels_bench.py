@@ -1,0 +1,201 @@
+"""Trainable-kernel microbenchmark: fwd and fwd+bwd walltime of the
+Pallas flash-attention / SSD kernels vs the model's jnp reference paths,
+plus HBM-byte accounting for the attention backward at S=1024
+(``artifacts/bench/BENCH_kernels.json``).
+
+Byte accounting (DESIGN.md §11): the REFERENCE path is measured with the
+existing ``launch/hlo_flops.py`` trip-count-aware analysis over the
+XLA-compiled fwd+bwd program — it materializes the (S, S) score /
+probability / dS tensors, so its traffic is O(S^2). The KERNEL path's
+HBM traffic is its DMA boundary, computed exactly from the grid /
+BlockSpec geometry (``flash_attention_hbm_bytes``): score tiles and
+running statistics are VMEM-resident by construction and never hit HBM.
+The interpret-mode HLO of the kernel is also run through ``hlo_flops``
+and recorded for transparency — it spills every VMEM tile to a buffer,
+so it overstates TPU traffic by orders of magnitude and is NOT the
+headline number.
+
+Walltime on this CPU container compares interpret-mode kernels (traced
+jnp emulation of the TPU algorithm) against the jnp reference — the
+kernel path is expected to be SLOWER here; the numbers exist to track
+regressions and to be re-run on real TPU hardware.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.kernels_bench            # full
+    PYTHONPATH=src python -m benchmarks.kernels_bench --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention_hbm_bytes
+from repro.kernels.flash_attention import flash_attention as flash_raw
+from repro.launch.hlo_flops import hlo_flops_bytes
+from repro.models.attention import full_attention
+from repro.models.ssm import ssd_chunked
+
+from .common import save_json
+
+BYTES_SHAPE = (1, 8, 1024, 64)      # (B, H, S, D) for the S=1024 analysis
+BYTES_BLOCK = 512                   # 2x2 kv/q blocks at S=1024
+
+
+def _time(fn, args, iters: int, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _vjp_fn(f):
+    def run(*args):
+        out, pull = jax.vjp(f, *args[:-1])
+        return pull(args[-1])
+    return run
+
+
+# ---------------------------------------------------------------------- #
+# walltime
+# ---------------------------------------------------------------------- #
+def time_attention(shapes, iters: int):
+    out = {}
+    for (b, s, h, d) in shapes:            # model layout (B, S, H, D)
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        q, k, v, do = (jax.random.normal(kk, (b, s, h, d)) for kk in ks)
+        kern = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v))
+        ref = jax.jit(lambda q, k, v: full_attention(q, k, v))
+        row = {
+            "fwd": {"kernel": _time(kern, (q, k, v), iters),
+                    "ref": _time(ref, (q, k, v), iters)},
+            "fwd_bwd": {
+                "kernel": _time(
+                    jax.jit(_vjp_fn(lambda q, k, v:
+                                    ops.flash_attention(q, k, v))),
+                    (q, k, v, do), iters),
+                "ref": _time(
+                    jax.jit(_vjp_fn(lambda q, k, v:
+                                    full_attention(q, k, v))),
+                    (q, k, v, do), iters)},
+        }
+        out[f"b{b}_s{s}_h{h}_d{d}"] = row
+    return out
+
+
+def time_ssd(shapes, iters: int):
+    out = {}
+    for (b, s, h, p, n, chunk) in shapes:
+        ks = jax.random.split(jax.random.PRNGKey(0), 6)
+        x = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)) - 1.0)
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+        Bm = jax.random.normal(ks[3], (b, s, n))
+        Cm = jax.random.normal(ks[4], (b, s, n))
+        dy = jax.random.normal(ks[5], (b, s, h, p))
+        kern = jax.jit(lambda *a: ops.ssd(*a, chunk=chunk))
+        ref = jax.jit(lambda *a: ssd_chunked(*a, chunk=chunk))
+        row = {
+            "fwd": {"kernel": _time(kern, (x, dt, A, Bm, Cm), iters),
+                    "ref": _time(ref, (x, dt, A, Bm, Cm), iters)},
+            "fwd_bwd": {
+                "kernel": _time(
+                    jax.jit(_vjp_fn(lambda *a: ops.ssd(*a, chunk=chunk))),
+                    (x, dt, A, Bm, Cm, dy), iters),
+                "ref": _time(
+                    jax.jit(_vjp_fn(lambda *a: ssd_chunked(*a, chunk=chunk))),
+                    (x, dt, A, Bm, Cm, dy), iters)},
+        }
+        out[f"b{b}_s{s}_h{h}_p{p}_n{n}"] = row
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# attention-backward byte accounting at S=1024
+# ---------------------------------------------------------------------- #
+def attention_bytes(include_interpret_hlo: bool = True):
+    b, h, s, d = BYTES_SHAPE
+    spec = jax.ShapeDtypeStruct((b, h, s, d), jnp.float32)
+
+    def ref_prog(q, k, v, do):      # fwd + bwd of the full-softmax path
+        out, pull = jax.vjp(
+            lambda q, k, v: full_attention(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3)), q, k, v)
+        return pull(do.transpose(0, 2, 1, 3))
+
+    hlo = jax.jit(ref_prog).lower(spec, spec, spec, spec).compile().as_text()
+    ref_bytes = hlo_flops_bytes(hlo)["bytes"]
+
+    dma = flash_attention_hbm_bytes(b, h, s, d, block_q=BYTES_BLOCK,
+                                    block_k=BYTES_BLOCK)
+    # both sides are the full vjp program (forward + backward): the
+    # reference forward's residual traffic IS part of its backward cost,
+    # and the kernel's recompute strategy trades residuals for refetches
+    row = {
+        "shape_bhsd": list(BYTES_SHAPE),
+        "block": BYTES_BLOCK,
+        "ref_hlo_bytes_fwd_bwd": ref_bytes,
+        "kernel_dma_bytes_fwd_bwd": dma["fwd_bwd"],
+        "kernel_dma_bytes_bwd_only": dma["bwd"],
+        "fwd_bwd_bytes_reduction": ref_bytes / dma["fwd_bwd"],
+    }
+    if include_interpret_hlo:
+        def ker_prog(q, k, v, do):
+            out, pull = jax.vjp(
+                lambda q, k, v: flash_raw(
+                    q, k, v, block_q=BYTES_BLOCK, block_k=BYTES_BLOCK,
+                    interpret=True), q, k, v)
+            return pull(do)
+        hlo2 = jax.jit(ker_prog).lower(
+            spec, spec, spec, spec).compile().as_text()
+        # VMEM tiles spilled to buffers by the interpreter — overcount,
+        # recorded for transparency only (see module docstring)
+        row["kernel_interpret_hlo_bytes"] = hlo_flops_bytes(hlo2)["bytes"]
+    return row
+
+
+def run(smoke: bool = False, verbose: bool = True):
+    iters = 2 if smoke else 5
+    attn_shapes = [(1, 256, 2, 32)] if smoke else \
+        [(1, 256, 2, 32), (1, 512, 4, 64), (1, 1024, 4, 64)]
+    ssd_shapes = [(1, 256, 2, 16, 16, 128)] if smoke else \
+        [(1, 256, 2, 16, 16, 128), (1, 512, 4, 32, 32, 128)]
+
+    payload = {
+        "attention": {"timing": time_attention(attn_shapes, iters),
+                      "bytes_s1024": attention_bytes()},
+        "ssd": {"timing": time_ssd(ssd_shapes, iters)},
+        "meta": {"backend": jax.default_backend(), "smoke": smoke,
+                 "iters": iters,
+                 "note": "kernel timings are interpret-mode on CPU"},
+    }
+    path = save_json("BENCH_kernels.json", payload)
+    if verbose:
+        by = payload["attention"]["bytes_s1024"]
+        print(f"attention vjp (fwd+bwd) bytes @ S=1024 (block {by['block']}): "
+              f"ref {by['ref_hlo_bytes_fwd_bwd'] / 2**20:.0f} MiB (hlo_flops) "
+              f"vs kernel {by['kernel_dma_bytes_fwd_bwd'] / 2**20:.0f} MiB "
+              f"(DMA) -> {by['fwd_bwd_bytes_reduction']:.1f}x reduction")
+        for sec in ("attention", "ssd"):
+            for key, row in payload[sec]["timing"].items():
+                fb = row["fwd_bwd"]
+                print(f"{sec} {key}: fwd+bwd kernel {fb['kernel']:.3f}s "
+                      f"ref {fb['ref']:.3f}s")
+        print(f"wrote {path}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / few iters for CI")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -16,7 +16,8 @@ sys.path.insert(0, "src")
 from repro.configs import get_config
 from repro.data import SyntheticLM
 from repro.models import init_params, param_count
-from repro.train import TrainConfig, adamw_init, make_train_step, wsd_schedule
+from repro.train import (TrainConfig, adamw_init, make_jit_train_step,
+                         wsd_schedule)
 
 
 def main():
@@ -40,8 +41,9 @@ def main():
     sched = wsd_schedule(peak_lr=6e-4, warmup_steps=20,
                          stable_steps=int(args.steps * 0.7),
                          decay_steps=int(args.steps * 0.25))
-    step = jax.jit(make_train_step(
-        cfg, TrainConfig(accum_steps=args.accum_steps, schedule=sched)))
+    # donated params/opt-state (the loop below re-binds both each step)
+    step = make_jit_train_step(
+        cfg, TrainConfig(accum_steps=args.accum_steps, schedule=sched))
     opt = adamw_init(params)
     data = SyntheticLM(cfg, batch=args.batch, seq=args.seq,
                        structured=True)

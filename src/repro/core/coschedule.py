@@ -28,7 +28,8 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.data import make_batch
 from repro.models import init_params
-from repro.train import TrainConfig, adamw_init, make_train_step
+from repro.train import (TrainConfig, adamw_init, make_jit_train_step,
+                         make_train_step)
 
 from .interference import InterferenceModel
 
@@ -52,54 +53,61 @@ def _make_state(spec: JobSpec):
     return params, opt, batch
 
 
-def make_pair_step(spec_a: JobSpec, spec_b: JobSpec):
-    """One jitted program stepping BOTH jobs (time-multiplexed)."""
+def make_pair_step(spec_a: JobSpec, spec_b: JobSpec, *, donate: bool = False):
+    """One jitted program stepping BOTH jobs (time-multiplexed).
+
+    ``donate=True`` donates both jobs' params/opt-states (in-place
+    accumulation + AdamW update, the production configuration); callers
+    must then re-bind all four from the outputs each call."""
     step_a = make_train_step(spec_a.cfg, spec_a.train_config())
     step_b = make_train_step(spec_b.cfg, spec_b.train_config())
 
-    @jax.jit
     def pair_step(pa, oa, ba, pb, ob, bb):
         pa, oa, ma = step_a(pa, oa, ba)
         pb, ob, mb = step_b(pb, ob, bb)
         return pa, oa, ma, pb, ob, mb
 
-    return pair_step
-
-
-def _time_fn(fn, args, iters: int, warmup: int = 1) -> float:
-    for _ in range(warmup):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
+    return jax.jit(pair_step, donate_argnums=(0, 1, 3, 4) if donate else ())
 
 
 def measure_solo(spec: JobSpec, iters: int = 3) -> float:
-    """Mean seconds per solo training step."""
+    """Mean seconds per solo training step (donated train step; state is
+    threaded through the timing loop because donation invalidates the
+    input buffers)."""
     params, opt, batch = _make_state(spec)
-    step = jax.jit(make_train_step(spec.cfg, spec.train_config()))
-    return _time_fn(step, (params, opt, batch), iters)
+    step = make_jit_train_step(spec.cfg, spec.train_config())
+    params, opt, _ = step(params, opt, batch)        # compile + warmup
+    jax.block_until_ready(params)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        params, opt, _ = step(params, opt, batch)
+    jax.block_until_ready(params)
+    return (time.perf_counter() - t0) / iters
 
 
 def measure_pair(spec_a: JobSpec, spec_b: JobSpec,
                  iters: int = 3) -> Dict[str, float]:
-    """Times the interleaved pair program and returns solo/pair times and
-    the structural interference ratios xi_A, xi_B."""
+    """Times the interleaved pair program and returns per-step solo/pair
+    walltimes and the structural interference ratios xi_A, xi_B."""
     t_a = measure_solo(spec_a, iters)
     t_b = measure_solo(spec_b, iters)
     pa, oa, ba = _make_state(spec_a)
     pb, ob, bb = _make_state(spec_b)
-    pair = make_pair_step(spec_a, spec_b)
-    t_pair = _time_fn(pair, (pa, oa, ba, pb, ob, bb), iters)
+    pair = make_pair_step(spec_a, spec_b, donate=True)
+    pa, oa, _, pb, ob, _ = pair(pa, oa, ba, pb, ob, bb)   # compile + warmup
+    jax.block_until_ready((pa, pb))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        pa, oa, _, pb, ob, _ = pair(pa, oa, ba, pb, ob, bb)
+    jax.block_until_ready((pa, pb))
+    t_pair = (time.perf_counter() - t0) / iters
     return {
         "t_a_solo": t_a,
         "t_b_solo": t_b,
         "t_pair": t_pair,
         "xi_a": t_pair / t_a,
         "xi_b": t_pair / t_b,
+        "iters": iters,
     }
 
 

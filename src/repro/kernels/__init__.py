@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the compute hot spots (flash attention, Mamba2
-SSD chunk scan), each with a pure-jnp oracle in ``ref.py`` and a jit'd
-wrapper in ``ops.py``. Validated with ``interpret=True`` on CPU."""
+SSD chunk scan), forward and backward (``jax.custom_vjp``), each with a
+pure-jnp oracle in ``ref.py`` and a jit'd wrapper in ``ops.py``.
+Validated — values and ``jax.grad`` — with ``interpret=True`` on CPU."""
 from . import ops
 from . import ref
 

@@ -1,20 +1,49 @@
-"""Flash-attention forward Pallas TPU kernel.
+"""Flash-attention Pallas TPU kernels — forward AND backward (trainable).
 
-Grid: (B*H, n_q_blocks, n_kv_blocks) — the kv dimension is innermost, so
-the running (m, l, acc) flash statistics live in VMEM scratch across kv
-steps (TPU grids execute sequentially over the last dimension). Block
-shapes are MXU-aligned (multiples of 128 on the matmul dims); the VMEM
-working set per step is q/k/v blocks + the f32 accumulator:
-  (BQ*D + 2*BK*D) * 2B + BQ*(D+2)*4B  ~= 0.4 MiB at BQ=BK=128, D=128,
-comfortably inside the ~16 MiB v5e VMEM budget even with double buffering.
+Forward grid: (B*H, n_q_blocks, n_kv_blocks) — the kv dimension is
+innermost, so the running (m, l, acc) flash statistics live in VMEM
+scratch across kv steps (TPU grids execute sequentially over the last
+dimension). The forward also emits the per-row log-sum-exp
+``lse = m + log(l)`` so the backward can recompute the probabilities
+without materializing the (S, S) matrix.
 
-Validated in ``interpret=True`` mode against ``ref.attention_ref`` over a
-shape/dtype sweep (tests/test_kernels.py); on CPU the ops wrapper always
-interprets (this container has no TPU).
+Backward (recompute-based, DESIGN.md §11): with the standard
+``D_i = rowsum(dO_i * O_i)`` trick,
+
+    P_ij = exp(s_ij - lse_i)          s_ij = scale * q_i . k_j  (masked)
+    dV_j = sum_i P_ij dO_i
+    dP_ij = dO_i . v_j
+    dS_ij = P_ij (dP_ij - D_i)
+    dQ_i = scale * sum_j dS_ij k_j
+    dK_j = scale * sum_i dS_ij q_i
+
+split into two kernels so each output has a sequential accumulation
+dimension innermost: the dq kernel iterates kv blocks innermost (dq tile
+accumulates in VMEM), the dk/dv kernel iterates q blocks innermost
+(dk/dv tiles accumulate in VMEM). D is a cheap fused jnp rowsum outside
+the kernels. Everything is wired through ``jax.custom_vjp`` in
+``flash_attention`` below, so ``jax.grad`` works natively on TPU and in
+``interpret=True`` mode on CPU.
+
+Block shapes are MXU-aligned (multiples of 128 on the matmul dims); the
+VMEM working set per backward step is q/k/v/do blocks + the f32
+accumulator + the (BQ, BK) score tile:
+  (2*BQ*D + 2*BK*D) * 2B + BQ*D*4B + BQ*BK*4B ~= 0.6 MiB at
+BQ=BK=D=128, comfortably inside the ~16 MiB v5e VMEM budget even with
+double buffering. Sequences that are not a multiple of the block size
+are zero-padded by ``flash_attention`` and masked inside the kernels via
+the static ``seq_len`` bound (padding happens OUTSIDE the custom_vjp, so
+cotangents of the pad rows are exactly zero).
+
+Validated in ``interpret=True`` mode against ``ref.attention_ref`` (and
+its ``jax.grad``) over a shape/dtype sweep (tests/test_kernels.py,
+tests/test_kernel_grads.py); on CPU the ops wrapper always interprets
+(this container has no TPU).
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -24,9 +53,29 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                      block_q: int, block_k: int, causal: bool, window: int,
-                      n_kv_blocks: int):
+def _score_mask(qi, ki, block_q, block_k, *, causal, window, seq_len):
+    """(BQ, BK) validity mask for the score tile at (q block qi, kv block
+    ki). ``seq_len`` masks zero-padded kv columns (qpos >= seq_len rows
+    are garbage by design — their outputs/cotangents are sliced/zeroed
+    outside the kernel)."""
+    qpos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = kpos < seq_len
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    return mask
+
+
+# ---------------------------------------------------------------------- #
+# forward
+# ---------------------------------------------------------------------- #
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref,
+                      acc_ref, *, block_q: int, block_k: int, causal: bool,
+                      window: int, seq_len: int, n_kv_blocks: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -42,16 +91,8 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     d = q.shape[-1]
     s = jnp.dot(q * (d ** -0.5), k.T,
                 preferred_element_type=jnp.float32)  # (BQ, BK)
-
-    qpos = qi * block_q + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, block_k), 0)
-    kpos = ki * block_k + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, block_k), 1)
-    mask = jnp.ones_like(s, dtype=jnp.bool_)
-    if causal:
-        mask &= qpos >= kpos
-    if window > 0:
-        mask &= kpos > qpos - window
+    mask = _score_mask(qi, ki, block_q, block_k, causal=causal,
+                       window=window, seq_len=seq_len)
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_ref[...]
@@ -67,19 +108,30 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(ki == n_kv_blocks - 1)
     def _finalize():
+        l = l_ref[...]
         o_ref[0] = (acc_ref[...]
-                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
-                    ).astype(o_ref.dtype)
+                    / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+        # lse = m + log(l); fully-masked rows get 0 so the backward's
+        # exp(NEG_INF - lse) recompute stays exactly 0 (no inf * 0).
+        lse_ref[0] = jnp.where(l > 0, m_ref[...] + jnp.log(
+            jnp.maximum(l, 1e-30)), 0.0)
 
 
 def flash_attention_fwd(q, k, v, *, causal=True, window=0,
-                        block_q=128, block_k=128, interpret=False):
-    """q/k/v: (B, H, S, D) -> (B, H, S, D)."""
+                        block_q=128, block_k=128, interpret=False,
+                        seq_len=None, return_lse=False):
+    """q/k/v: (B, H, S, D) -> (B, H, S, D) [, lse (B, H, S) f32].
+
+    Raw divisible-shape primitive; ``flash_attention`` below adds padding
+    and the custom VJP. ``seq_len`` masks kv positions >= seq_len (used
+    when S includes zero padding)."""
     b, h, s, d = q.shape
     assert k.shape == v.shape == (b, h, s, d)
     block_q = min(block_q, s)
     block_k = min(block_k, s)
     assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    if seq_len is None:
+        seq_len = s
     nq, nk = s // block_q, s // block_k
     bh = b * h
     qr = q.reshape(bh, s, d)
@@ -88,8 +140,8 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=0,
 
     kernel = functools.partial(
         _flash_fwd_kernel, block_q=block_q, block_k=block_k,
-        causal=causal, window=window, n_kv_blocks=nk)
-    out = pl.pallas_call(
+        causal=causal, window=window, seq_len=seq_len, n_kv_blocks=nk)
+    out, lse = pl.pallas_call(
         kernel,
         grid=(bh, nq, nk),
         in_specs=[
@@ -97,9 +149,14 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=0,
             pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
             pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, d),
-                               lambda bh, qi, ki: (bh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((block_q,), jnp.float32),      # running max m
             pltpu.VMEM((block_q,), jnp.float32),      # running sum l
@@ -107,4 +164,219 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=0,
         ],
         interpret=interpret,
     )(qr, kr, vr)
-    return out.reshape(b, h, s, d)
+    out = out.reshape(b, h, s, d)
+    if return_lse:
+        return out, lse.reshape(b, h, s)
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# backward
+# ---------------------------------------------------------------------- #
+def _recompute_p_ds(q, k, v, do, lse, delta, qi, ki, block_q, block_k, *,
+                    causal, window, seq_len):
+    """Shared bwd tile math: P = exp(s - lse) and dS = P * (dP - D)."""
+    d = q.shape[-1]
+    s = jnp.dot(q * (d ** -0.5), k.T,
+                preferred_element_type=jnp.float32)    # (BQ, BK)
+    mask = _score_mask(qi, ki, block_q, block_k, causal=causal,
+                       window=window, seq_len=seq_len)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])                      # masked entries -> 0
+    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None])
+    return p, ds
+
+
+def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                         dq_ref, acc_ref, *, block_q: int, block_k: int,
+                         causal: bool, window: int, seq_len: int,
+                         n_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    _, ds = _recompute_p_ds(q, k, v, do, lse_ref[0], delta_ref[0],
+                            qi, ki, block_q, block_k, causal=causal,
+                            window=window, seq_len=seq_len)
+    d = q.shape[-1]
+    acc_ref[...] += jnp.dot(ds, k, preferred_element_type=jnp.float32) \
+        * (d ** -0.5)
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        dq_ref[0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkdv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                           dk_ref, dv_ref, dk_acc, dv_acc, *, block_q: int,
+                           block_k: int, causal: bool, window: int,
+                           seq_len: int, n_q_blocks: int):
+    ki = pl.program_id(1)
+    qi = pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    p, ds = _recompute_p_ds(q, k, v, do, lse_ref[0], delta_ref[0],
+                            qi, ki, block_q, block_k, causal=causal,
+                            window=window, seq_len=seq_len)
+    d = q.shape[-1]
+    dv_acc[...] += jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+    dk_acc[...] += jnp.dot(ds.T, q, preferred_element_type=jnp.float32) \
+        * (d ** -0.5)
+
+    @pl.when(qi == n_q_blocks - 1)
+    def _finalize():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, window=0,
+                        block_q=128, block_k=128, interpret=False,
+                        seq_len=None):
+    """Raw backward: (B, H, S, D) residuals + cotangent -> dq, dk, dv."""
+    b, h, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    if seq_len is None:
+        seq_len = s
+    nq, nk = s // block_q, s // block_k
+    bh = b * h
+    qr, kr, vr = (t.reshape(bh, s, d) for t in (q, k, v))
+    dor = do.reshape(bh, s, d)
+    lser = lse.reshape(bh, s)
+    # D_i = rowsum(dO_i * O_i): cheap fused elementwise outside the grid.
+    delta = jnp.sum(dor.astype(jnp.float32)
+                    * o.reshape(bh, s, d).astype(jnp.float32), axis=-1)
+
+    common = dict(block_q=block_q, block_k=block_k, causal=causal,
+                  window=window, seq_len=seq_len)
+    q_spec = pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0))
+    k_spec = pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0))
+    row_spec = pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi))
+
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, n_kv_blocks=nk, **common),
+        grid=(bh, nq, nk),
+        in_specs=[q_spec, k_spec, k_spec, q_spec, row_spec, row_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        interpret=interpret,
+    )(qr, kr, vr, dor, lser, delta)
+
+    # kv blocks outermost, q blocks innermost: dk/dv accumulate in VMEM.
+    tq_spec = pl.BlockSpec((1, block_q, d), lambda bh, ki, qi: (bh, qi, 0))
+    tk_spec = pl.BlockSpec((1, block_k, d), lambda bh, ki, qi: (bh, ki, 0))
+    trow_spec = pl.BlockSpec((1, block_q), lambda bh, ki, qi: (bh, qi))
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_bwd_dkdv_kernel, n_q_blocks=nq, **common),
+        grid=(bh, nk, nq),
+        in_specs=[tq_spec, tk_spec, tk_spec, tq_spec, trow_spec, trow_spec],
+        out_specs=[tk_spec, tk_spec],
+        out_shape=[jax.ShapeDtypeStruct((bh, s, d), k.dtype),
+                   jax.ShapeDtypeStruct((bh, s, d), v.dtype)],
+        scratch_shapes=[pltpu.VMEM((block_k, d), jnp.float32),
+                        pltpu.VMEM((block_k, d), jnp.float32)],
+        interpret=interpret,
+    )(qr, kr, vr, dor, lser, delta)
+    shape = (b, h, s, d)
+    return dq.reshape(shape), dk.reshape(shape), dv.reshape(shape)
+
+
+# ---------------------------------------------------------------------- #
+# custom_vjp core (divisible shapes) + padded public entry
+# ---------------------------------------------------------------------- #
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash_core(q, k, v, seq_len, causal, window, block_q, block_k,
+                interpret):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret, seq_len=seq_len)
+
+
+def _flash_core_fwd(q, k, v, seq_len, causal, window, block_q, block_k,
+                    interpret):
+    o, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=interpret, seq_len=seq_len,
+                                 return_lse=True)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_core_bwd(seq_len, causal, window, block_q, block_k, interpret,
+                    res, do):
+    q, k, v, o, lse = res
+    return flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                               window=window, block_q=block_q,
+                               block_k=block_k, interpret=interpret,
+                               seq_len=seq_len)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention_hbm_bytes(b, h, s, d, *, block_q=128, block_k=128,
+                              dtype_bytes=4):
+    """Exact HBM (DMA) traffic of the flash kernels, from the same
+    grid/BlockSpec geometry the ``pallas_call``s use: a block is fetched
+    when its index-map output changes (Pallas elides refetches of an
+    unchanged block across inner grid steps), score tiles and running
+    statistics never leave VMEM. This is the TPU traffic measure used by
+    ``benchmarks/kernels_bench.py``; interpret-mode HLO materializes the
+    VMEM tiles into buffers and overcounts by orders of magnitude.
+    Row statistics (lse, delta) are counted at ``dtype_bytes`` for
+    simplicity (they are f32 regardless of the input dtype)."""
+    bq, bk = min(block_q, s), min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    nq, nk = s // bq, s // bk
+    bh = b * h
+    fwd = bh * (nq * bq * d                 # q: once per q block
+                + nq * nk * 2 * bk * d      # k, v: refetched per (qi, ki)
+                + nq * (bq * d + bq))       # o + lse writes
+    delta = bh * (2 * s * d + s)            # rowsum(dO * O) read/write
+    dq = bh * (nq * (2 * bq * d + 2 * bq)   # q, do, lse, delta: per qi
+               + nq * nk * 2 * bk * d       # k, v: per (qi, ki)
+               + nq * bq * d)               # dq write
+    dkdv = bh * (nk * 2 * bk * d            # k, v: once per kv block
+                 + nk * nq * (2 * bq * d + 2 * bq)  # q/do/lse/delta per (ki, qi)
+                 + nk * 2 * bk * d)         # dk, dv writes
+    out = {"fwd": float(fwd * dtype_bytes),
+           "bwd": float((delta + dq + dkdv) * dtype_bytes)}
+    out["fwd_bwd"] = out["fwd"] + out["bwd"]
+    return out
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=False):
+    """Trainable flash attention, (B, H, S, D) layout, any S.
+
+    Sequences that are not a multiple of the block size are zero-padded
+    to the next block multiple and masked via the kernels' ``seq_len``
+    bound; padding/slicing sit OUTSIDE the custom_vjp, so JAX's linear
+    pad/slice rules zero the pad-row cotangents automatically."""
+    b, h, s, d = q.shape
+    bq, bk = min(block_q, s), min(block_k, s)
+    if s % bq or s % bk:
+        sp = math.lcm(block_q, block_k) * pl.cdiv(
+            s, math.lcm(block_q, block_k))
+        pad = ((0, 0), (0, 0), (0, sp - s), (0, 0))
+        q, k, v = (jnp.pad(t, pad) for t in (q, k, v))
+        bq, bk = min(block_q, sp), min(block_k, sp)
+    out = _flash_core(q, k, v, s, causal, window, bq, bk, interpret)
+    return out[:, :, :s]

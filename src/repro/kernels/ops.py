@@ -3,16 +3,21 @@
 On TPU the Pallas kernels compile natively; on CPU (this container) they
 execute in ``interpret=True`` mode — the kernel body runs as traced jnp,
 bit-matching the TPU algorithm for validation.
+
+Both wrappers are TRAINABLE: the underlying entries carry a
+``jax.custom_vjp`` whose backward passes are themselves Pallas kernels
+(recompute-based flash backward, reverse-chunk SSD backward — DESIGN.md
+§11), so ``jax.grad`` through ``use_kernels=True`` works on both
+backends. Sequence lengths that are not a multiple of the block/chunk
+size are zero-padded and masked inside the kernels, so every ``configs/``
+shape can take the kernel path.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 
-from .flash_attention import flash_attention_fwd
-from .mamba2_scan import ssd_fwd
+from . import flash_attention as _flash
+from . import mamba2_scan as _ssd
 
 
 def _interpret() -> bool:
@@ -21,16 +26,18 @@ def _interpret() -> bool:
 
 def flash_attention(q, k, v, *, causal=True, window=0,
                     block_q=128, block_k=128):
-    """q/k/v: (B, S, H, D) (model layout) -> (B, S, H, D)."""
+    """q/k/v: (B, S, H, D) (model layout) -> (B, S, H, D). Differentiable
+    in q, k, v; any sequence length."""
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    out = flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
-                              block_q=block_q, block_k=block_k,
-                              interpret=_interpret())
+    out = _flash.flash_attention(qt, kt, vt, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=_interpret())
     return out.transpose(0, 2, 1, 3)
 
 
 def ssd(x, dt, A, Bm, Cm, *, chunk=256):
-    """Mamba2 SSD: x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N)."""
-    return ssd_fwd(x, dt, A, Bm, Cm, chunk=chunk, interpret=_interpret())
+    """Mamba2 SSD: x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N).
+    Differentiable in all five operands; any sequence length."""
+    return _ssd.ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=_interpret())

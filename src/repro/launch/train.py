@@ -19,7 +19,8 @@ from repro.data import SyntheticLM
 from repro.models import init_params, param_count
 from repro.sharding.hooks import activation_rules
 from repro.sharding.rules import make_rules
-from repro.train import TrainConfig, adamw_init, make_train_step, wsd_schedule
+from repro.train import (TrainConfig, adamw_init, make_jit_train_step,
+                         wsd_schedule)
 
 
 def build_argparser():
@@ -57,7 +58,6 @@ def main(argv=None):
     print(f"arch={cfg.name} params={param_count(params):,} "
           f"accum={args.accum_steps}")
 
-    step_fn = make_train_step(cfg, tc)
     ctx = None
     if args.distributed:
         from repro.launch.mesh import make_production_mesh
@@ -65,7 +65,9 @@ def main(argv=None):
         rules = make_rules(mesh)
         ctx = activation_rules(rules.activation_table(), mesh)
         ctx.__enter__()
-    step = jax.jit(step_fn)
+    # params/opt-state are donated (in-place update; the training loop
+    # below re-binds both from the outputs every step)
+    step = make_jit_train_step(cfg, tc)
 
     data = SyntheticLM(cfg, args.batch, args.seq)
     t0 = time.time()

@@ -1,6 +1,9 @@
 """GQA attention: full, chunked (flash-style, jnp — the lowering-friendly
 path used for long sequences; the Pallas TPU kernel in ``repro.kernels``
-implements the same algorithm), and single-token decode against a KV cache.
+implements the same algorithm and is TRAINABLE — its ``custom_vjp``
+backward is a recompute-based Pallas kernel, so ``use_kernel=True`` works
+under ``jax.grad`` at any sequence length), and single-token decode
+against a KV cache.
 
 Sliding-window masking supports the sub-quadratic dense variants used by
 ``long_500k`` (DESIGN.md §5).
@@ -177,6 +180,8 @@ def attention(p, x, cos, sin, *, n_heads, n_kv_heads, head_dim,
     k = _repeat_kv(k, groups)
     v = _repeat_kv(v, groups)
     if use_kernel:
+        # Pallas flash kernel (fwd + custom_vjp bwd); pads internally, so
+        # every configs/ sequence length is eligible.
         from repro.kernels import flash_attention_ops
         out = flash_attention_ops.flash_attention(
             q, k, v, causal=causal, window=window)

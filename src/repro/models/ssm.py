@@ -142,6 +142,7 @@ def mamba2_forward(p, x, *, d_inner, ssm_state, n_heads,
                          + p["dt_bias"][None, None])          # (b,s,h)
     A = -jnp.exp(p["A_log"])
     if use_kernel:
+        # Pallas SSD kernel (fwd + custom_vjp bwd; trainable, any S)
         from repro.kernels import mamba2_ops
         y = mamba2_ops.ssd(xs, dt, A, Bm, Cm)
         state = None

@@ -3,8 +3,9 @@ mechanism), AdamW, LR schedules, loss and the jit-able train step."""
 from .grad_accum import accumulate_gradients
 from .optimizer import (OptState, adamw_init, adamw_update, wsd_schedule,
                         cosine_schedule)
-from .train_step import TrainConfig, loss_fn, make_train_step
+from .train_step import (TrainConfig, loss_fn, make_jit_train_step,
+                         make_train_step)
 
 __all__ = ["OptState", "TrainConfig", "accumulate_gradients", "adamw_init",
-           "adamw_update", "cosine_schedule", "loss_fn", "make_train_step",
-           "wsd_schedule"]
+           "adamw_update", "cosine_schedule", "loss_fn",
+           "make_jit_train_step", "make_train_step", "wsd_schedule"]

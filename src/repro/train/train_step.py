@@ -35,12 +35,23 @@ class TrainConfig:
 def loss_fn(cfg: ArchConfig, params, batch: Dict[str, jnp.ndarray], *,
             aux_loss_weight: float = 0.01, remat: bool = True,
             use_kernels: bool = False) -> Tuple[jnp.ndarray, Dict]:
+    """Mean next-token CE. An optional ``sample_mask`` (B,) entry marks
+    padded rows of a ragged final micro-batch (grad_accum.py): masked
+    samples contribute nothing to the CE term and the mean runs over
+    valid samples. The MoE aux loss is a batch statistic (DESIGN.md §8)
+    and is NOT masked — padded rows do pass through the router, so MoE
+    accumulation equivalence holds only with aux_loss_weight=0."""
     logits, aux = forward(cfg, params, batch, remat=remat,
                           use_kernels=use_kernels)
     labels = batch["labels"]
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
-    ce = -jnp.mean(ll)
+    mask = batch.get("sample_mask")
+    if mask is None:
+        ce = -jnp.mean(ll)
+    else:
+        ce = -jnp.sum(ll * mask[:, None]) / (
+            jnp.maximum(jnp.sum(mask), 1.0) * ll.shape[1])
     loss = ce + aux_loss_weight * aux
     return loss, {"ce": ce, "aux": aux}
 
@@ -77,3 +88,16 @@ def make_train_step(cfg: ArchConfig, tc: TrainConfig = TrainConfig()):
         return params, opt_state, {"loss": loss, "grad_norm": gnorm}
 
     return train_step
+
+
+def make_jit_train_step(cfg: ArchConfig, tc: TrainConfig = TrainConfig(), *,
+                        donate: bool = True):
+    """``make_train_step`` jitted with params/opt-state DONATED: the
+    gradient-accumulation buffers and the AdamW moment update reuse the
+    input HBM in place instead of allocating a second copy — halving the
+    peak optimizer-state footprint on TPU. Callers must re-bind
+    (params, opt_state) from the outputs every step (the donated inputs
+    are invalidated); `repro.core.coschedule` and `repro.launch.train`
+    thread state that way."""
+    step = make_train_step(cfg, tc)
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())

@@ -1,0 +1,186 @@
+"""Trainable Pallas kernel path (interpret=True on CPU): ``jax.grad``
+through the flash-attention / SSD custom_vjp backward kernels vs the
+pure-jnp oracles in ``repro.kernels.ref``, the padded (non-block-multiple)
+sequence path, the end-to-end ``use_kernels=True`` model gradient, and the
+donated jitted train step.
+
+Tolerances are scale-normalized: gradients are compared after dividing by
+``max(1, max|g_ref|)``, so "within 1e-5" means 1e-5 relative to the
+gradient magnitude (the oracles accumulate in a different order, so tiny
+entries of large-magnitude gradients carry O(eps * scale) noise).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import make_batch
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba2_scan import ssd
+from repro.kernels.ref import attention_ref, ssd_ref
+from repro.models import init_params
+from repro.train import (TrainConfig, adamw_init, loss_fn,
+                         make_jit_train_step, make_train_step)
+
+
+def _assert_grads_close(got, want, tol=1e-5):
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        scale = max(1.0, float(jnp.abs(b).max()))
+        np.testing.assert_allclose(np.asarray(a) / scale,
+                                   np.asarray(b) / scale, atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------- #
+# flash attention backward
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("b,h,s,d", [
+    (1, 1, 128, 64), (2, 2, 256, 32), (1, 2, 384, 64),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_grads_sweep(b, h, s, d, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q, k, v = [jax.random.normal(kk, (b, h, s, d), dtype) for kk in ks[:3]]
+    w = jax.random.normal(ks[3], (b, h, s, d))
+
+    def loss(f):
+        return lambda q, k, v: jnp.sum(
+            f(q, k, v).astype(jnp.float32) * w)
+
+    gk = jax.grad(loss(lambda q, k, v: flash_attention(
+        q, k, v, causal=causal, interpret=True)), (0, 1, 2))(q, k, v)
+    gr = jax.grad(loss(lambda q, k, v: attention_ref(
+        q, k, v, causal=causal)), (0, 1, 2))(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    _assert_grads_close(gk, gr, tol)
+
+
+@pytest.mark.parametrize("window", [32, 100])
+def test_flash_grads_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q, k, v = [jax.random.normal(kk, (2, 2, 256, 64)) for kk in ks[:3]]
+    w = jax.random.normal(ks[3], (2, 2, 256, 64))
+    gk = jax.grad(lambda q, k, v: jnp.sum(flash_attention(
+        q, k, v, causal=True, window=window, interpret=True) * w),
+        (0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda q, k, v: jnp.sum(attention_ref(
+        q, k, v, causal=True, window=window) * w), (0, 1, 2))(q, k, v)
+    _assert_grads_close(gk, gr)
+
+
+@pytest.mark.parametrize("s,causal", [(100, True), (320, False), (200, True)])
+def test_flash_padded_seq_fwd_and_grads(s, causal):
+    """S not a multiple of the block: zero-pad + seq_len masking instead
+    of the old ``s % block_q == 0`` assert."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q, k, v = [jax.random.normal(kk, (1, 2, s, 32)) for kk in ks[:3]]
+    w = jax.random.normal(ks[3], (1, 2, s, 32))
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    gk = jax.grad(lambda q, k, v: jnp.sum(flash_attention(
+        q, k, v, causal=causal, interpret=True) * w), (0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda q, k, v: jnp.sum(attention_ref(
+        q, k, v, causal=causal) * w), (0, 1, 2))(q, k, v)
+    _assert_grads_close(gk, gr)
+
+
+def test_flash_grads_block_shapes():
+    """Backward must be block-size independent (the accumulators live in
+    VMEM scratch across the inner grid dimension)."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    q, k, v = [jax.random.normal(kk, (1, 2, 256, 64)) for kk in ks[:3]]
+    w = jax.random.normal(ks[3], (1, 2, 256, 64))
+    grads = []
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        grads.append(jax.grad(lambda q, k, v: jnp.sum(flash_attention(
+            q, k, v, block_q=bq, block_k=bk, interpret=True) * w),
+            (0, 1, 2))(q, k, v))
+    for g in grads[1:]:
+        _assert_grads_close(g, grads[0])
+
+
+# ---------------------------------------------------------------------- #
+# ssd backward
+# ---------------------------------------------------------------------- #
+def _ssd_inputs(key, b, s, h, p, n):
+    ks = jax.random.split(jax.random.PRNGKey(key), 6)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (b, s, n))
+    Cm = jax.random.normal(ks[4], (b, s, n))
+    w = jax.random.normal(ks[5], (b, s, h, p))
+    return x, dt, A, Bm, Cm, w
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 128, 1, 8, 4, 64), (2, 256, 2, 16, 8, 128),
+    (1, 256, 2, 32, 16, 64), (1, 100, 1, 8, 4, 64),   # last: padded path
+])
+def test_ssd_grads_sweep(b, s, h, p, n, chunk):
+    """d(x, dt, A, B, C) through the reverse-chunk backward kernel vs the
+    sequential oracle, including a non-chunk-multiple (padded) length."""
+    x, dt, A, Bm, Cm, w = _ssd_inputs(0, b, s, h, p, n)
+    gk = jax.grad(lambda *a: jnp.sum(ssd(
+        *a, chunk=chunk, interpret=True) * w), (0, 1, 2, 3, 4))(
+        x, dt, A, Bm, Cm)
+    gr = jax.grad(lambda *a: jnp.sum(ssd_ref(*a) * w), (0, 1, 2, 3, 4))(
+        x, dt, A, Bm, Cm)
+    _assert_grads_close(gk, gr)
+
+
+def test_ssd_grads_chunk_continuity():
+    """dstate must flow seamlessly across chunk boundaries: gradients are
+    chunk-size independent."""
+    x, dt, A, Bm, Cm, w = _ssd_inputs(1, 1, 256, 2, 8, 8)
+    grads = []
+    for chunk in (32, 64, 128, 256):
+        grads.append(jax.grad(lambda *a: jnp.sum(ssd(
+            *a, chunk=chunk, interpret=True) * w), (0, 1, 2, 3, 4))(
+            x, dt, A, Bm, Cm))
+    for g in grads[1:]:
+        _assert_grads_close(g, grads[0])
+
+
+# ---------------------------------------------------------------------- #
+# end-to-end: use_kernels=True model gradients + donated train step
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("arch", ["minicpm-2b", "zamba2-7b"])
+def test_model_grads_use_kernels(arch):
+    """jax.grad through the full model with the kernel path (flash for
+    dense, SSD for hybrid) vs the jnp reference path; seq=48 exercises
+    the padding path inside both kernels."""
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 48)
+    gk = jax.grad(lambda p: loss_fn(cfg, p, batch, use_kernels=True)[0])(
+        params)
+    gr = jax.grad(lambda p: loss_fn(cfg, p, batch, use_kernels=False)[0])(
+        params)
+    _assert_grads_close(gk, gr, 1e-5)
+
+
+def test_donated_train_step_matches_undonated():
+    """make_jit_train_step donates params/opt-state; two threaded steps
+    must match the undonated trajectory exactly."""
+    cfg = dataclasses.replace(get_config("minicpm-2b").reduced(),
+                              dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    tc = TrainConfig(accum_steps=2)
+    undonated = jax.jit(make_train_step(cfg, tc))
+    donated = make_jit_train_step(cfg, tc)
+    pu, ou = params, opt
+    pd, od = params, opt
+    for i in range(2):
+        batch = make_batch(cfg, 4, 32, step=i)
+        pu, ou, mu = undonated(pu, ou, batch)
+        pd, od, md = donated(pd, od, batch)
+    assert float(mu["loss"]) == float(md["loss"])
+    for a, b in zip(jax.tree.leaves(pd), jax.tree.leaves(pu)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
