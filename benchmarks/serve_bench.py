@@ -1,0 +1,242 @@
+"""Serving-path microbenchmark: decode tok/s and per-token latency of
+the fused ``lax.scan`` generation loop vs the eager per-token dispatch
+loop it replaces (plus the Pallas flash-decode variant), and one-shot vs
+per-token prefill, across the architecture families
+(``artifacts/bench/BENCH_serve.json``).
+
+Two eager baselines are recorded:
+
+* ``eager`` — the SEED's loop, reproduced faithfully: ``jax.jit`` is
+  re-created on every generate() call, so every call pays retrace +
+  compile before dispatching one call per token.  This is the loop the
+  fused engine replaces and the acceptance baseline.
+* ``eager_cached`` — the same per-token loop with the jitted step cached
+  across calls (this PR's satellite fix).  On this CPU container the
+  remaining gap to ``scan`` is Python dispatch + functional cache-copy
+  overhead per token — modest here, larger on accelerators where
+  dispatch latency is not hidden by slow per-op compute.
+
+All decode paths run behind the SAME one-shot prefill and are asserted
+token-identical at run time.  The flash-decode kernel runs in interpret
+mode on CPU and is expected to be slower — the number exists for
+regression tracking and TPU re-runs, like ``kernels_bench``.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.serve_bench            # full
+    PYTHONPATH=src python -m benchmarks.serve_bench --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch import serve
+from repro.launch.engine import DecodeEngine
+from repro.models import init_cache, init_params
+
+from .common import save_json
+
+BATCH = 8            # the acceptance scenario: batch 8
+PROMPT_LEN = 8
+
+# family representatives: dense KV, ring-buffer sliding window, MoE,
+# xLSTM state, Mamba2 hybrid, whisper encoder-decoder
+FULL_ARCHS = (("minicpm-2b", {}),
+              ("glm4-9b", {"sliding_window": 16}),
+              # decode never drops tokens; give the batched prefill enough
+              # MoE capacity to match it (same note as tests/test_decode.py)
+              ("granite-moe-3b-a800m", {"moe_capacity_factor": 8.0}),
+              ("xlstm-1.3b", {}),
+              ("zamba2-7b", {}),
+              ("whisper-tiny", {}))
+SMOKE_ARCHS = (("minicpm-2b", {}), ("xlstm-1.3b", {}))
+
+
+def _cfg(name, **kw):
+    return dataclasses.replace(get_config(name).reduced(),
+                               dtype="float32", **kw)
+
+
+def _time(fn, iters: int, warmup: int = 1) -> float:
+    out = None
+    for _ in range(warmup):
+        out = fn()
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_arch(name, kw, *, tokens: int, max_len: int, iters: int,
+               with_kernel: bool = True):
+    cfg = _cfg(name, **kw)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (BATCH, PROMPT_LEN)),
+                         jnp.int32)
+    frames = None
+    if cfg.is_encoder_decoder:
+        frames = jnp.asarray(rng.standard_normal(
+            (BATCH, cfg.encoder_seq, cfg.d_model)) * 0.02, jnp.float32)
+    common = dict(max_new_tokens=tokens, max_len=max_len, frames=frames,
+                  prefill_mode="one_shot")
+
+    def gen(engine, use_kernels=False):
+        return lambda: serve.generate(cfg, params, prompt, engine=engine,
+                                      use_kernels=use_kernels, **common)
+
+    def gen_seed():
+        # the seed's generate(), reproduced faithfully: teacher-forced
+        # prefill through UNJITTED decode_step dispatches (one per prompt
+        # token), then a FRESH jax.jit per call (retrace + compile every
+        # generate) dispatching one call per generated token.
+        from repro.models import decode_step, init_cache as _ic
+        from repro.models import prefill_cache_whisper as _pcw
+        if cfg.is_encoder_decoder:
+            cache = _pcw(cfg, params, frames, BATCH, max_len)
+        else:
+            cache = _ic(cfg, BATCH, max_len)
+        for t in range(prompt.shape[1]):
+            logits, cache = decode_step(cfg, params, cache,
+                                        prompt[:, t:t + 1])
+        step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out = []
+        for _ in range(tokens):
+            out.append(tok)
+            logits, cache = step(params, cache, tok)
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return jnp.concatenate(out, axis=1)
+
+    # token identity between the paths is part of the contract
+    toks_seed = gen_seed()
+    toks_eager = gen("eager")()
+    toks_scan = gen("scan")()
+    identical = (bool((np.asarray(toks_eager) == np.asarray(toks_scan)).all())
+                 and bool((np.asarray(toks_seed)
+                           == np.asarray(toks_scan)).all()))
+    assert identical, f"{name}: scan tokens diverge from eager"
+
+    n_tok = BATCH * tokens
+    t_seed = _time(gen_seed, min(2, iters))   # seconds per call; cap iters
+    t_eager = _time(gen("eager"), iters)
+    t_scan = _time(gen("scan"), iters)
+    row = {
+        # end-to-end generate (prefill + decode loop), seed vs fused
+        "eager_tok_s": n_tok / t_seed,
+        "scan_tok_s": n_tok / t_scan,
+        "scan_speedup": t_seed / t_scan,
+        "eager_ms_per_tok": 1e3 * t_seed / tokens,
+        "scan_ms_per_tok": 1e3 * t_scan / tokens,
+        # decode-loop-only baseline with the jitted step cached (the
+        # satellite fix): isolates dispatch + cache-copy overhead
+        "eager_cached_tok_s": n_tok / t_eager,
+        "scan_speedup_vs_cached": t_eager / t_scan,
+        "eager_cached_ms_per_tok": 1e3 * t_eager / tokens,
+        "tokens_identical": identical,
+    }
+    if with_kernel and cfg.family != "ssm":   # pure-SSM archs have no KV attn
+        t_kern = _time(gen("scan", use_kernels=True), iters)
+        row["scan_kernel_tok_s"] = n_tok / t_kern
+        row["scan_kernel_ms_per_tok"] = 1e3 * t_kern / tokens
+
+    # prefill: one-shot single dispatch vs T sequential decode_step calls
+    def pf(mode):
+        def run():
+            if cfg.is_encoder_decoder:
+                from repro.models import prefill_cache_whisper
+                cache = prefill_cache_whisper(cfg, params, frames, BATCH,
+                                              max_len)
+            else:
+                cache = init_cache(cfg, BATCH, max_len)
+            fn = (serve.prefill_one_shot if mode == "one_shot"
+                  else serve.prefill_per_token)
+            return fn(cfg, params, prompt, cache)[0]
+        return run
+
+    t_pf1 = _time(pf("one_shot"), iters)
+    t_pft = _time(pf("per_token"), iters)
+    row["prefill"] = {
+        "one_shot_s": t_pf1,
+        "per_token_s": t_pft,
+        "one_shot_speedup": t_pft / t_pf1,
+    }
+    return row
+
+
+def bench_engine(*, tokens: int, iters: int):
+    """Continuous-batching throughput: more requests than slots, admitted
+    as slots free up (vs serving the same load as sequential batches)."""
+    cfg = _cfg("minicpm-2b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    n_req, n_slots = 8, 4
+    prompts = [rng.integers(0, cfg.vocab, (PROMPT_LEN,)) for _ in range(n_req)]
+    # ONE engine reused across iterations: slots free up after each
+    # drain and the segment/prefill jits stay warm, so the timing
+    # measures engine throughput, not retrace + compile
+    eng = DecodeEngine(cfg, params, n_slots=n_slots, max_len=64, segment=8)
+
+    def run():
+        rids = [eng.submit(p, tokens) for p in prompts]
+        eng.run()
+        return [eng.outputs[r] for r in rids]
+
+    out = run()                                   # warmup + sanity
+    assert all(len(v) == tokens for v in out)
+    t = _time(run, iters, warmup=0)
+    return {"n_requests": n_req, "n_slots": n_slots,
+            "tokens_per_request": tokens,
+            "tok_s": n_req * tokens / t}
+
+
+def run(smoke: bool = False, verbose: bool = True):
+    iters = 2 if smoke else 5
+    tokens = 16 if smoke else 32
+    max_len = 64 if smoke else 128
+    archs = SMOKE_ARCHS if smoke else FULL_ARCHS
+
+    decode = {}
+    for name, kw in archs:
+        decode[name] = bench_arch(name, kw, tokens=tokens, max_len=max_len,
+                                  iters=iters)
+    payload = {
+        "decode": decode,
+        "engine": bench_engine(tokens=tokens, iters=max(1, iters - 1)),
+        "meta": {"batch": BATCH, "prompt_len": PROMPT_LEN,
+                 "new_tokens": tokens, "backend": jax.default_backend(),
+                 "smoke": smoke, "iters": iters,
+                 "note": "kernel timings are interpret-mode on CPU"},
+    }
+    path = save_json("BENCH_serve.json", payload)
+    if verbose:
+        for name, row in decode.items():
+            kern = row.get("scan_kernel_tok_s")
+            kern_s = f" kernel {kern:7.1f}" if kern else ""
+            print(f"{name:<24} eager(seed) {row['eager_tok_s']:7.1f} "
+                  f"cached {row['eager_cached_tok_s']:7.1f} "
+                  f"scan {row['scan_tok_s']:7.1f} tok/s{kern_s}  "
+                  f"({row['scan_speedup']:.1f}x vs seed, "
+                  f"{row['scan_speedup_vs_cached']:.1f}x vs cached, "
+                  f"prefill one-shot {row['prefill']['one_shot_speedup']:.1f}x)")
+        eng = payload["engine"]
+        print(f"continuous batching: {eng['n_requests']} reqs / "
+              f"{eng['n_slots']} slots -> {eng['tok_s']:.1f} tok/s")
+        print(f"wrote {path}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / few iters for CI")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -1,6 +1,7 @@
 """Batched serving across cache families: generate tokens with a dense
 (ring-buffer sliding window), an SSM (O(1) state) and an encoder-decoder
-architecture, demonstrating the unified decode_step API.
+architecture through the fused scan engine (one-shot prefill + one
+jitted dispatch per generation).
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -35,10 +36,10 @@ def main():
         if cfg.is_encoder_decoder:
             frames = jnp.asarray(rng.standard_normal(
                 (b, cfg.encoder_seq, cfg.d_model)) * 0.02, jnp.float32)
-        t0 = time.time()
+        t0 = time.perf_counter()
         toks = generate(cfg, params, prompt, max_new_tokens=new,
                         max_len=64, frames=frames)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         print(f"{name:<28} cache={cfg.family:<7} "
               f"generated {toks.shape[0]}x{toks.shape[1]} tokens "
               f"in {dt:5.1f}s ({b * new / dt:6.1f} tok/s)")

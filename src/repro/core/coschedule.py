@@ -85,12 +85,17 @@ def measure_solo(spec: JobSpec, iters: int = 3) -> float:
     return (time.perf_counter() - t0) / iters
 
 
-def measure_pair(spec_a: JobSpec, spec_b: JobSpec,
-                 iters: int = 3) -> Dict[str, float]:
+def measure_pair(spec_a: JobSpec, spec_b: JobSpec, iters: int = 3, *,
+                 t_a_solo: Optional[float] = None,
+                 t_b_solo: Optional[float] = None) -> Dict[str, float]:
     """Times the interleaved pair program and returns per-step solo/pair
-    walltimes and the structural interference ratios xi_A, xi_B."""
-    t_a = measure_solo(spec_a, iters)
-    t_b = measure_solo(spec_b, iters)
+    walltimes and the structural interference ratios xi_A, xi_B.
+
+    ``t_a_solo`` / ``t_b_solo`` accept precomputed solo timings (see
+    ``calibrate_interference``'s O(n) solo pass); when omitted they are
+    measured here."""
+    t_a = measure_solo(spec_a, iters) if t_a_solo is None else t_a_solo
+    t_b = measure_solo(spec_b, iters) if t_b_solo is None else t_b_solo
     pa, oa, ba = _make_state(spec_a)
     pb, ob, bb = _make_state(spec_b)
     pair = make_pair_step(spec_a, spec_b, donate=True)
@@ -127,11 +132,18 @@ def structural_xi(t_me: float, t_other: float, *, overlap: float = 0.0,
 def calibrate_interference(specs: Dict[str, JobSpec], iters: int = 2,
                            ) -> InterferenceModel:
     """Fill an InterferenceModel table from real pairwise measurements on
-    this host (the 'physical' calibration pass of Section VI-A)."""
+    this host (the 'physical' calibration pass of Section VI-A).
+
+    Solo timings are measured ONCE per spec in an O(n) pass and reused
+    for every pair — each solo measurement compiles and trains a real
+    model, so re-running it for both members of all O(n²) pairs dominated
+    calibration walltime."""
     model = InterferenceModel()
     names = sorted(specs)
+    solo = {name: measure_solo(specs[name], iters) for name in names}
     for i, a in enumerate(names):
         for b in names[i:]:
-            r = measure_pair(specs[a], specs[b], iters=iters)
+            r = measure_pair(specs[a], specs[b], iters=iters,
+                             t_a_solo=solo[a], t_b_solo=solo[b])
             model.set_pair(a, b, r["xi_a"], r["xi_b"])
     return model

@@ -1,0 +1,121 @@
+"""Flash-decode Pallas TPU kernel — single-query attention over a KV
+cache (the serving hot loop).
+
+Decode attention is one query row per (batch, head) against ``S_cache``
+cached keys/values, of which only a dynamic prefix ``lengths[b]`` is
+valid (the linear, non-ring cache layout: slot ``t`` holds absolute
+position ``t``).  The kernel blocks over the KV length with the kv
+dimension innermost — grid ``(B*H, n_kv_blocks)`` — so the running
+flash statistics (max ``m``, sum ``l``, weighted accumulator ``acc``)
+live in VMEM scratch across kv steps, exactly like the full
+flash-attention forward in ``flash_attention.py``; only q, the kv
+blocks, and the (1, D) output ever cross the DMA boundary.
+
+Masking: the cache length ``S_cache`` is static (zero-padded to a block
+multiple outside the kernel) while the *valid* prefix is dynamic, so the
+per-(batch,head) length rides in SMEM and masks ``kpos >= length``.
+Fully-masked tail blocks keep ``m = NEG_INF``; probabilities are zeroed
+with an explicit ``where`` (``exp(NEG_INF - NEG_INF) == 1`` otherwise),
+so they contribute exactly nothing to ``l``/``acc``.
+
+There is no backward: decode runs under ``lax.stop_gradient`` semantics
+by construction (no ``custom_vjp`` needed — nothing differentiates
+through the serving loop).  On CPU the wrapper in ``ops.py`` runs the
+kernel with ``interpret=True``, bit-matching the TPU algorithm.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, block_k: int,
+                         n_kv_blocks: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)               # (1, D)
+    k = k_ref[0].astype(jnp.float32)               # (BK, D)
+    v = v_ref[0].astype(jnp.float32)
+    d = q.shape[-1]
+    s = jnp.dot(q * (d ** -0.5), k.T,
+                preferred_element_type=jnp.float32)  # (1, BK)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_k), 1)
+    valid = kpos < len_ref[0, 0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (1,)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    # explicit zero for masked columns: when a block is fully masked,
+    # m_new stays NEG_INF and exp(s - m_new) would be exp(0) == 1.
+    p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, lengths, *, block_k=128, interpret=False):
+    """q: (B, H, 1, D); k/v: (B, H, S, D) KV cache (kv heads already
+    repeated to H); lengths: (B,) i32 — number of valid cache rows per
+    batch element (linear layout).  Returns (B, H, 1, D)."""
+    b, h, one, d = q.shape
+    assert one == 1, q.shape
+    s = k.shape[2]
+    assert k.shape == v.shape == (b, h, s, d), (k.shape, v.shape)
+    bk = min(block_k, s)
+    if s % bk:
+        sp = bk * pl.cdiv(s, bk)
+        pad = ((0, 0), (0, 0), (0, sp - s), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        s = sp
+    nk = s // bk
+    bh = b * h
+    qr = q.reshape(bh, 1, d)
+    kr = k.reshape(bh, s, d)
+    vr = v.reshape(bh, s, d)
+    lens = jnp.broadcast_to(lengths.astype(jnp.int32)[:, None],
+                            (b, h)).reshape(bh, 1)
+
+    kernel = functools.partial(_flash_decode_kernel, block_k=bk,
+                               n_kv_blocks=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bh, ki: (bh, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, d), lambda bh, ki: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bh, ki: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),       # running max m
+            pltpu.VMEM((1,), jnp.float32),       # running sum l
+            pltpu.VMEM((1, d), jnp.float32),     # accumulator
+        ],
+        interpret=interpret,
+    )(lens, qr, kr, vr)
+    return out.reshape(b, h, 1, d)

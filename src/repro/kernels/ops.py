@@ -17,6 +17,7 @@ from __future__ import annotations
 import jax
 
 from . import flash_attention as _flash
+from . import flash_decode as _decode
 from . import mamba2_scan as _ssd
 
 
@@ -34,6 +35,19 @@ def flash_attention(q, k, v, *, causal=True, window=0,
     out = _flash.flash_attention(qt, kt, vt, causal=causal, window=window,
                                  block_q=block_q, block_k=block_k,
                                  interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+def flash_decode(q, k, v, lengths, *, block_k=128):
+    """Single-query decode attention against a linear KV cache.
+    q: (B, 1, H, D) (model layout), k/v: (B, S_cache, H, D) with kv heads
+    already repeated to H, lengths: (B,) valid-prefix rows.  Not
+    differentiable (serving only)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = _decode.flash_decode(qt, kt, vt, lengths, block_k=block_k,
+                               interpret=_interpret())
     return out.transpose(0, 2, 1, 3)
 
 

@@ -1,0 +1,191 @@
+"""Slot-based continuous batching: the serving twin of the simulator's
+sharing scheduler.
+
+A ``DecodeEngine`` owns a fixed number of decode *slots* (the batch
+dimension of one shared cache pytree) and a FIFO queue of requests.
+Decoding advances all slots together in fused ``lax.scan`` segments (one
+dispatch per ``segment`` tokens, per-slot absolute positions carried in
+the cache's ``index`` vector); between segments, finished slots are
+freed and queued requests are admitted into them — each admission runs
+the single-shot prefill for that request alone and scatters the
+resulting cache rows into the slot, so a reused slot never observes the
+previous occupant's state.
+
+Inactive slots keep stepping (their compute is masked out only by
+discarding the emitted tokens) — exactly the fixed-shape trade the
+paper's GPU-sharing scheduler makes: pay a bounded, predictable cost per
+step in exchange for never re-compiling and never stalling the batch.
+
+Whisper-style encoder-decoder configs are not supported here (each
+request would carry its own encoder pass; use ``serve.generate``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.serve import _make_scan_generate
+from repro.models import init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (plen,) i32
+    max_new_tokens: int
+
+
+class DecodeEngine:
+    """Continuous-batching decode engine over ``n_slots`` fixed slots."""
+
+    def __init__(self, cfg, params, *, n_slots: int = 4, max_len: int = 256,
+                 segment: int = 8, use_kernels: bool = False):
+        assert not cfg.is_encoder_decoder, \
+            "encoder-decoder configs are served via serve.generate"
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.max_len, self.segment = n_slots, max_len, segment
+        self.use_kernels = use_kernels
+
+        cache = init_cache(cfg, n_slots, max_len)
+        cache["index"] = jnp.zeros((n_slots,), jnp.int32)  # per-slot position
+        self.cache = cache
+        self.tok = jnp.zeros((n_slots, 1), jnp.int32)      # next input token
+        self.active = np.zeros(n_slots, bool)
+        self.remaining = np.zeros(n_slots, np.int64)
+        self.slot_rid: List[int] = [-1] * n_slots
+
+        self.queue: deque = deque()
+        self.outputs: Dict[int, List[int]] = {}
+        self._next_rid = 0
+        self._prefill_fns: Dict[int, Any] = {}
+        self._segment_fn = jax.jit(self._make_segment_fn())
+        self.stats = {"segments": 0, "admitted": 0, "wasted_slot_steps": 0}
+
+    # ------------------------------------------------------------------ #
+    def submit(self, prompt, max_new_tokens: int = 16) -> int:
+        """Queue a request; returns its id (key into ``outputs``)."""
+        prompt = np.asarray(prompt, np.int32)
+        if _has_linear_kv(self.cfg):
+            # a linear KV cache holds one row per prompt + generated
+            # token, and a slot keeps stepping to the end of its last
+            # segment — writes past max_len would be clamped/dropped
+            # silently while the validity mask still trusts them
+            segs = -(-max_new_tokens // self.segment)
+            need = prompt.shape[0] + segs * self.segment
+            assert need <= self.max_len, (
+                f"request needs {need} cache rows (prompt "
+                f"{prompt.shape[0]} + {segs}x{self.segment}-step "
+                f"segments) but max_len is {self.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, prompt, max_new_tokens))
+        self.outputs[rid] = []
+        return rid
+
+    # ------------------------------------------------------------------ #
+    def _make_segment_fn(self):
+        """One fused greedy scan segment — serve's scan body with the
+        PRNG key pinned (greedy ignores it), continuing the carry."""
+        run = _make_scan_generate(self.cfg, self.segment, True,
+                                  self.use_kernels)
+        key = jax.random.PRNGKey(0)
+
+        def seg(params, cache, tok):
+            toks, cache, tok, _ = run(params, cache, tok, key)
+            return toks, cache, tok
+        return seg
+
+    def _prefill_fn(self, plen: int):
+        fn = self._prefill_fns.get(plen)
+        if fn is None:
+            cfg, max_len = self.cfg, self.max_len
+
+            def run(params, tokens):
+                cache = init_cache(cfg, 1, max_len)
+                return prefill(cfg, params, cache, tokens,
+                               use_kernels=self.use_kernels)
+            fn = self._prefill_fns[plen] = jax.jit(run)
+        return fn
+
+    # ------------------------------------------------------------------ #
+    def _admit(self) -> None:
+        """Fill every free slot from the queue: solo single-shot prefill,
+        then scatter the request's cache rows into the slot."""
+        for slot in range(self.n_slots):
+            if self.active[slot] or not self.queue:
+                continue
+            req = self.queue.popleft()
+            assert req.prompt.shape[0] <= self.max_len
+            logits, pcache = self._prefill_fn(req.prompt.shape[0])(
+                self.params, jnp.asarray(req.prompt)[None, :])
+            self.cache["units"] = _scatter_slot(
+                self.cache["units"], pcache["units"], slot)
+            self.cache["index"] = self.cache["index"].at[slot].set(
+                req.prompt.shape[0])
+            first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+            self.tok = self.tok.at[slot, 0].set(first)
+            self.active[slot] = True
+            self.remaining[slot] = req.max_new_tokens
+            self.slot_rid[slot] = req.rid
+            self.stats["admitted"] += 1
+
+    def step_segment(self) -> None:
+        """One fused scan segment + post-segment bookkeeping/admission."""
+        self._admit()
+        toks, self.cache, self.tok = self._segment_fn(
+            self.params, self.cache, self.tok)
+        toks = np.asarray(toks)                     # (n_slots, segment)
+        self.stats["segments"] += 1
+        self.stats["wasted_slot_steps"] += int(
+            (~self.active).sum()) * self.segment
+        for slot in range(self.n_slots):
+            if not self.active[slot]:
+                continue
+            take = int(min(self.segment, self.remaining[slot]))
+            self.outputs[self.slot_rid[slot]].extend(
+                int(t) for t in toks[slot, :take])
+            self.remaining[slot] -= take
+            self.stats["wasted_slot_steps"] += self.segment - take
+            if self.remaining[slot] == 0:
+                self.active[slot] = False           # slot freed for reuse
+                self.slot_rid[slot] = -1
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drain the queue and all active slots; returns {rid: tokens}."""
+        while self.queue or self.active.any():
+            self.step_segment()
+        return self.outputs
+
+
+# ---------------------------------------------------------------------- #
+def _has_linear_kv(cfg) -> bool:
+    """True if decode writes one linear KV-cache row per absolute
+    position (so prompt + generation must fit in max_len).  Ring buffers
+    (sliding window) wrap and SSM/xLSTM state is O(1)."""
+    if cfg.sliding_window > 0:
+        return False
+    return cfg.family in ("dense", "vlm", "moe", "audio") or (
+        cfg.family == "hybrid" and cfg.attn_every > 0)
+
+
+def _scatter_slot(dst_tree, src_tree, slot: int):
+    """Write a batch-1 cache pytree into slot ``slot`` of the engine's
+    batch-``n_slots`` cache.  The slot (batch) axis position varies per
+    leaf ((U, B, ...) for KV, (U, u, B, ...) for stacked SSM layers), so
+    it is identified as the one axis where the shapes differ."""
+    def put(dst, src):
+        ax = None
+        for i, (a, b) in enumerate(zip(dst.shape, src.shape)):
+            if a != b:
+                ax = i
+                break
+        if ax is None:                  # n_slots == 1: plain replacement
+            return src.astype(dst.dtype)
+        idx = (slice(None),) * ax + (slot,)
+        return dst.at[idx].set(jnp.squeeze(src, axis=ax).astype(dst.dtype))
+    return jax.tree.map(put, dst_tree, src_tree)

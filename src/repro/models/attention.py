@@ -193,12 +193,65 @@ def attention(p, x, cos, sin, *, n_heads, n_kv_heads, head_dim,
     return linear(p["wo"], out.reshape(b, s, n_heads * head_dim))
 
 
+def attention_prefill(p, x, cos, sin, cache, *, n_heads, n_kv_heads,
+                      head_dim, window=0, use_kernel: bool = False
+                      ) -> Tuple[jnp.ndarray, dict]:
+    """Single-shot prefill: attend over the whole prompt (same math as
+    ``attention``) AND write the per-position K/V rows into a FRESH decode
+    cache.  x: (B, S, D); cache: {"k","v"} (B, S_cache, Hkv, D) — linear
+    layout (slot t == position t) when ``window == 0``, ring-buffered
+    (slot t == t % S_cache) when ``window > 0``.  The cache must start at
+    index 0; callers continue decoding at absolute position S."""
+    b, s, _ = x.shape
+    q = linear(p["wq"], x).reshape(b, s, n_heads, head_dim)
+    k = linear(p["wk"], x).reshape(b, s, n_kv_heads, head_dim)
+    v = linear(p["wv"], x).reshape(b, s, n_kv_heads, head_dim)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = constrain(q, "act_heads")
+    s_cache = cache["k"].shape[1]
+    if window > 0:
+        # ring buffer: only the last min(S, S_cache) positions survive;
+        # their slots (t % S_cache) are distinct, so one scatter suffices.
+        keep = min(s, s_cache)
+        slots = (jnp.arange(s - keep, s) % s_cache).astype(jnp.int32)
+        ck = cache["k"].at[:, slots].set(
+            k[:, s - keep:].astype(cache["k"].dtype))
+        cv = cache["v"].at[:, slots].set(
+            v[:, s - keep:].astype(cache["v"].dtype))
+    else:
+        assert s <= s_cache, (s, s_cache)
+        ck = cache["k"].at[:, :s].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[:, :s].set(v.astype(cache["v"].dtype))
+    ck = constrain(ck, "kv_cache")
+    cv = constrain(cv, "kv_cache")
+
+    groups = n_heads // n_kv_heads
+    kk = _repeat_kv(k, groups)
+    vv = _repeat_kv(v, groups)
+    if use_kernel:
+        from repro.kernels import flash_attention_ops
+        out = flash_attention_ops.flash_attention(
+            q, kk, vv, causal=True, window=window)
+    elif s >= CHUNKED_THRESHOLD:
+        out = chunked_attention(q, kk, vv, causal=True, window=window)
+    else:
+        out = full_attention(q, kk, vv, causal=True, window=window)
+    out = constrain(out, "act_heads")
+    return (linear(p["wo"], out.reshape(b, s, n_heads * head_dim)),
+            {"k": ck, "v": cv})
+
+
 def attention_decode(p, x, cos, sin, cache, index, *, n_heads, n_kv_heads,
-                     head_dim, window=0) -> Tuple[jnp.ndarray, dict]:
+                     head_dim, window=0, use_kernel: bool = False
+                     ) -> Tuple[jnp.ndarray, dict]:
     """One-token decode. x: (B, 1, D); cache: {"k","v"} (B, S_cache, Hkv, D)
     ring-buffered when ``window > 0`` (S_cache == window), else linear
     (S_cache == max_len). ``index`` is the absolute decode position (B,)
-    or scalar."""
+    or scalar.  ``use_kernel=True`` takes the Pallas flash-decode kernel
+    for the linear layout (the ring buffer's valid set is not a prefix,
+    so it keeps the jnp path)."""
     b, one, _ = x.shape
     assert one == 1
     q = linear(p["wq"], x).reshape(b, 1, n_heads, head_dim)
@@ -224,22 +277,27 @@ def attention_decode(p, x, cos, sin, cache, index, *, n_heads, n_kv_heads,
     groups = n_heads // n_kv_heads
     kk = _repeat_kv(ck, groups)
     vv = _repeat_kv(cv, groups)
-    scale = head_dim ** -0.5
-    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
-                        kk.astype(jnp.float32)) * scale
-    kpos = jnp.arange(s_cache)[None, :]             # (1, S)
     idx = index if index.ndim > 0 else index[None]
-    if window > 0:
-        # ring buffer: reconstruct the absolute position held by each slot;
-        # valid iff written and within the window.
-        abs_pos = _ring_abs_pos(idx, s_cache)       # (B, S)
-        valid = (abs_pos <= idx[:, None]) & (abs_pos > idx[:, None] - window) \
-            & (abs_pos >= 0)
+    if use_kernel and window == 0:
+        from repro.kernels import flash_attention_ops
+        lengths = jnp.broadcast_to(idx + 1, (b,))
+        out = flash_attention_ops.flash_decode(q, kk, vv, lengths)
     else:
-        valid = kpos <= idx[:, None]
-    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv.astype(jnp.float32))
+        scale = head_dim ** -0.5
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                            kk.astype(jnp.float32)) * scale
+        kpos = jnp.arange(s_cache)[None, :]             # (1, S)
+        if window > 0:
+            # ring buffer: reconstruct the absolute position held by each
+            # slot; valid iff written and within the window.
+            abs_pos = _ring_abs_pos(idx, s_cache)       # (B, S)
+            valid = (abs_pos <= idx[:, None]) \
+                & (abs_pos > idx[:, None] - window) & (abs_pos >= 0)
+        else:
+            valid = kpos <= idx[:, None]
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv.astype(jnp.float32))
     out = out.astype(x.dtype).reshape(b, 1, n_heads * head_dim)
     return linear(p["wo"], out), {"k": ck, "v": cv}
 

@@ -479,10 +479,137 @@ def prefill_cache_whisper(cfg, params, frames, batch, max_len, dtype=None):
     return cache
 
 
+def prefill(cfg: ArchConfig, params, cache, tokens, *,
+            use_kernels: bool = False) -> Tuple[jnp.ndarray, Any]:
+    """Single-shot prefill: populate a FRESH decode cache (index 0) from
+    the whole prompt in ONE call instead of S sequential ``decode_step``
+    dispatches.  tokens: (B, S) i32; for whisper, ``cache`` comes from
+    ``prefill_cache_whisper`` (cross K/V already populated).
+
+    Returns (logits (B, S, V), cache): the logits match teacher-forced
+    ``forward`` position by position, and the cache is the one a
+    per-token decode_step loop would have produced (KV rows / ring slots
+    / SSM, conv, mLSTM, sLSTM states), with ``index`` advanced to S."""
+    dt = _dtype(cfg)
+    b, s = tokens.shape
+    fam = cfg.family
+    win = cfg.sliding_window
+    x = embed(params["embed"], tokens, dt)
+    cos = sin = None
+    if cfg.is_encoder_decoder:
+        pos = sinusoidal_positions(jnp.arange(s), cfg.d_model).astype(dt)
+        x = x + pos[None]
+    else:
+        cos, sin = _rope_tables(cfg, jnp.arange(s))
+
+    shared = params.get("shared_attn")
+    akw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+               head_dim=cfg.head_dim, window=win, use_kernel=use_kernels)
+
+    def unit_prefill(x, p, c):
+        new_c = c
+        if fam in ("dense", "vlm"):
+            h, kv = attn_mod.attention_prefill(
+                p["attn"], rms_norm(p["ln1"], x, cfg.norm_eps),
+                cos, sin, c, **akw)
+            x = x + h
+            x = x + swiglu(p["mlp"], rms_norm(p["ln2"], x, cfg.norm_eps))
+            new_c = kv
+        elif fam == "moe":
+            new_c = dict(c)
+            u = cfg.pattern_unit()
+            for i in range(u):
+                sub = p[f"sub{i}"]
+                h, kv = attn_mod.attention_prefill(
+                    sub["attn"], rms_norm(sub["ln1"], x, cfg.norm_eps),
+                    cos, sin, c[f"sub{i}"], **akw)
+                x = x + h
+                hn = rms_norm(sub["ln2"], x, cfg.norm_eps)
+                if i == u - 1:
+                    y, _ = moe_mod.moe_forward(
+                        sub["ffn"], hn, n_experts=cfg.moe_experts,
+                        top_k=cfg.moe_top_k,
+                        capacity_factor=cfg.moe_capacity_factor,
+                        dispatch=cfg.moe_dispatch)
+                else:
+                    y = swiglu(sub["mlp"], hn)
+                x = x + y
+                new_c[f"sub{i}"] = kv
+        elif fam == "hybrid":
+            def layer(carry, pc):
+                xc = carry
+                lp, lc = pc
+                h, nc = ssm_mod.mamba2_prefill(
+                    lp["mamba"], rms_norm(lp["ln"], xc, cfg.norm_eps),
+                    lc, d_inner=cfg.d_inner, ssm_state=cfg.ssm_state,
+                    n_heads=cfg.n_ssm_heads)
+                return xc + h, nc
+            x, new_mamba = jax.lax.scan(layer, x, (p["mamba"], c["mamba"]))
+            new_c = {"mamba": new_mamba, "shared": c["shared"]}
+            if shared is not None:
+                h, kv = attn_mod.attention_prefill(
+                    shared["attn"], rms_norm(shared["ln1"], x, cfg.norm_eps),
+                    cos, sin, c["shared"], **akw)
+                x = x + h
+                x = x + swiglu(shared["mlp"],
+                               rms_norm(shared["ln2"], x, cfg.norm_eps))
+                new_c["shared"] = kv
+        elif fam == "ssm":
+            def layer(carry, pc):
+                xc = carry
+                lp, lc = pc
+                h, nc = xlstm_mod.mlstm_prefill(
+                    lp["mlstm"], rms_norm(lp["ln"], xc, cfg.norm_eps),
+                    lc, d_inner=cfg.d_inner, n_heads=cfg.n_heads)
+                return xc + h, nc
+            x, new_m = jax.lax.scan(layer, x, (p["mlstm"], c["mlstm"]))
+            new_c = {"mlstm": new_m}
+            if "slstm" in p:
+                # slstm_decode scans any S — it doubles as the prefill
+                h, nc = xlstm_mod.slstm_decode(
+                    p["slstm"]["slstm"],
+                    rms_norm(p["slstm"]["ln"], x, cfg.norm_eps),
+                    c["slstm"], n_heads=cfg.n_heads)
+                x = x + h
+                new_c["slstm"] = nc
+        elif fam == "audio":
+            h, kv = attn_mod.attention_prefill(
+                p["attn"], rms_norm(p["ln1"], x, cfg.norm_eps),
+                None, None, c["self"],
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_heads,
+                head_dim=cfg.head_dim, window=0, use_kernel=use_kernels)
+            x = x + h
+            xq = rms_norm(p["lnx"], x, cfg.norm_eps)
+            h = _cross_attention_cached(p["xattn"], cfg, xq, c["cross"],
+                                        cache.get("cross_len"))
+            x = x + h
+            x = x + gelu_mlp(p["mlp"], rms_norm(p["ln2"], x, cfg.norm_eps))
+            new_c = {"self": kv, "cross": c["cross"]}
+        else:
+            raise ValueError(fam)
+        return x, new_c
+
+    def body(x, pc):
+        p, c = pc
+        return unit_prefill(x, p, c)
+
+    x = constrain(x, "act_btd")
+    x, new_units = jax.lax.scan(body, x, (params["units"], cache["units"]))
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = _lm_head(cfg, params, x)
+    new_cache = dict(cache)
+    new_cache["units"] = new_units
+    new_cache["index"] = jnp.full_like(cache["index"], s)
+    return constrain(logits, "logits"), new_cache
+
+
 def decode_step(cfg: ArchConfig, params, cache, tokens, *,
-                index=None) -> Tuple[jnp.ndarray, Any]:
-    """tokens: (B, 1) i32; index: absolute position scalar (defaults to
-    cache['index']). Returns (logits (B,1,V), new cache)."""
+                index=None, use_kernels: bool = False
+                ) -> Tuple[jnp.ndarray, Any]:
+    """tokens: (B, 1) i32; index: absolute position, scalar or per-example
+    (B,) vector (defaults to cache['index']). Returns (logits (B,1,V),
+    new cache).  ``use_kernels=True`` routes linear-layout KV attention
+    through the Pallas flash-decode kernel."""
     dt = _dtype(cfg)
     b = tokens.shape[0]
     idx = cache["index"] if index is None else jnp.asarray(index)
@@ -491,17 +618,19 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, *,
     win = cfg.sliding_window
 
     if cfg.is_encoder_decoder:
-        pos = sinusoidal_positions(idx[None], cfg.d_model).astype(dt)
-        x = x + pos[None]
+        pos = sinusoidal_positions(idx if idx.ndim else idx[None],
+                                   cfg.d_model).astype(dt)
+        x = x + pos[:, None]                     # (B or 1, 1, D)
     else:
-        cos, sin = _rope_tables(cfg, idx[None][None])  # (B=1,S=1) positions
-        if cos is not None:
+        positions = idx[:, None] if idx.ndim else idx[None][None]
+        cos, sin = _rope_tables(cfg, positions)  # (B or 1, S=1) positions
+        if cos is not None and cos.shape[0] == 1:
             cos = jnp.broadcast_to(cos, (b,) + cos.shape[1:])
             sin = jnp.broadcast_to(sin, (b,) + sin.shape[1:])
 
     shared = params.get("shared_attn")
     akw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
-               head_dim=cfg.head_dim, window=win)
+               head_dim=cfg.head_dim, window=win, use_kernel=use_kernels)
 
     def unit_step(x, p, c):
         new_c = c
@@ -573,7 +702,7 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, *,
                 p["attn"], rms_norm(p["ln1"], x, cfg.norm_eps),
                 None, None, c["self"], idx,
                 n_heads=cfg.n_heads, n_kv_heads=cfg.n_heads,
-                head_dim=cfg.head_dim, window=0)
+                head_dim=cfg.head_dim, window=0, use_kernel=use_kernels)
             x = x + h
             xq = rms_norm(p["lnx"], x, cfg.norm_eps)
             h = _cross_decode(p["xattn"], cfg, xq, c["cross"],
@@ -599,10 +728,12 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, *,
     return constrain(logits, "logits"), new_cache
 
 
-def _cross_decode(p, cfg, xq, cross, cross_len):
-    b, one, _ = xq.shape
+def _cross_attention_cached(p, cfg, xq, cross, cross_len):
+    """Cross attention of S query positions against cached (padded)
+    encoder K/V, masked to the ``cross_len`` valid prefix."""
+    b, s, _ = xq.shape
     hd, nh = cfg.head_dim, cfg.n_heads
-    q = linear(p["wq"], xq).reshape(b, 1, nh, hd)
+    q = linear(p["wq"], xq).reshape(b, s, nh, hd)
     k, v = cross["k"], cross["v"]
     scale = hd ** -0.5
     scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
@@ -612,4 +743,8 @@ def _cross_decode(p, cfg, xq, cross, cross_len):
         scores = jnp.where(valid[:, None, None, :], scores, attn_mod.NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
-    return linear(p["wo"], out.astype(xq.dtype).reshape(b, 1, nh * hd))
+    return linear(p["wo"], out.astype(xq.dtype).reshape(b, s, nh * hd))
+
+
+def _cross_decode(p, cfg, xq, cross, cross_len):
+    return _cross_attention_cached(p, cfg, xq, cross, cross_len)

@@ -159,6 +159,43 @@ def mamba2_forward(p, x, *, d_inner, ssm_state, n_heads,
 
 
 # ---------------------------------------------------------------------- #
+# single-shot prefill (whole prompt -> populated decode cache)
+# ---------------------------------------------------------------------- #
+def mamba2_prefill(p, x, cache, *, d_inner, ssm_state, n_heads):
+    """Process the full prompt (B, S, d_model) in one call, warm-starting
+    from ``cache`` (conv window + SSM state) and returning the outputs
+    plus the cache a per-token ``mamba2_decode`` loop would have left
+    behind.  Same chunked SSD math as ``mamba2_forward``."""
+    b, s, _ = x.shape
+    n, h = ssm_state, n_heads
+    pp = d_inner // h
+    proj = linear(p["in_proj"], x)
+    z, xbc_raw, dt_raw = _split_proj(proj, d_inner, n, h)
+    # causal conv warm-started from the cached (d_conv - 1) raw rows
+    k = p["conv_w"].shape[0]
+    win = jnp.concatenate([cache["conv"].astype(xbc_raw.dtype), xbc_raw],
+                          axis=1)                 # (B, k-1+S, C)
+    conv = sum(win[:, i:i + s] * p["conv_w"][i].astype(win.dtype)
+               for i in range(k))
+    xbc = jax.nn.silu(conv + p["conv_b"].astype(conv.dtype))
+    new_conv = win[:, win.shape[1] - (k - 1):].astype(cache["conv"].dtype)
+    xbc = constrain(xbc, "act_inner")
+    xs = xbc[..., :d_inner].astype(jnp.float32).reshape(b, s, h, pp)
+    Bm = xbc[..., d_inner:d_inner + n].astype(jnp.float32)
+    Cm = xbc[..., d_inner + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd_chunked(xs, dt, A, Bm, Cm,
+                           init_state=cache["state"], return_state=True)
+    y = y + p["D"][None, None, :, None] * xs
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z))
+    out = linear(p["out_proj"], y)
+    return out, {"conv": new_conv, "state": constrain(state, "ssm_state")}
+
+
+# ---------------------------------------------------------------------- #
 # decode (single token, O(1) state)
 # ---------------------------------------------------------------------- #
 def mamba2_init_cache(batch, d_inner, ssm_state, n_heads, d_conv=4,

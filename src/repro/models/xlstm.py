@@ -121,6 +121,27 @@ def mlstm_forward(p, x, *, d_inner, n_heads):
     return linear(p["out_proj"], y)
 
 
+def mlstm_prefill(p, x, cache, *, d_inner, n_heads):
+    """Full-prompt prefill: (B, S, d_model) + (C, n, m) cache -> outputs
+    plus the end-of-prompt state a per-token decode loop would reach.
+    Chunkwise-parallel (``mlstm_chunked``), warm-started from the cache."""
+    b, s, _ = x.shape
+    h = n_heads
+    dh = d_inner // h
+    proj = linear(p["in_proj"], x)
+    q, k, v, z, i_raw, f_raw = _mlstm_split(proj, d_inner, h)
+    q = constrain(q, "act_inner")
+    f_log = -jax.nn.softplus(-f_raw.astype(jnp.float32))
+    i_log = i_raw.astype(jnp.float32)
+    rs = lambda t: t.astype(jnp.float32).reshape(b, s, h, dh)
+    y, (C, n, m) = mlstm_chunked(
+        rs(q), rs(k), rs(v), i_log, f_log,
+        init_state=(cache["C"], cache["n"], cache["m"]), return_state=True)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z))
+    return linear(p["out_proj"], y), {"C": C, "n": n, "m": m}
+
+
 def mlstm_init_cache(batch, d_inner, n_heads, dtype=jnp.float32):
     dh = d_inner // n_heads
     return {

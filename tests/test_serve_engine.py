@@ -1,0 +1,314 @@
+"""Fused decode engine: single-shot prefill equivalence, scan-vs-eager
+token identity (greedy and seeded sampling) across all cache families,
+flash-decode kernel vs oracle, continuous-batching slot invariants, jit
+caching, and the memoized interference calibration."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops
+from repro.launch import serve
+from repro.launch.engine import DecodeEngine
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          prefill, prefill_cache_whisper)
+from repro.models.attention import attention_decode, attention_init
+
+B, T = 2, 12
+ATOL = 2e-2
+
+# family representatives: dense KV, ring buffer, MoE, VLM, xLSTM, hybrid
+FAMILY_ARCHS = [
+    ("minicpm-2b", {}),
+    ("glm4-9b", {"sliding_window": 8}),
+    ("granite-moe-3b-a800m", {"moe_capacity_factor": 8.0}),
+    ("qwen2-vl-2b", {}),
+    ("xlstm-1.3b", {}),
+    ("zamba2-7b", {}),
+]
+
+
+def _cfg(name, **kw):
+    return dataclasses.replace(get_config(name).reduced(),
+                               dtype="float32", **kw)
+
+
+def _setup(name, seed=0, **kw):
+    cfg = _cfg(name, **kw)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, T)), jnp.int32)
+    frames = None
+    if cfg.is_encoder_decoder:
+        frames = jnp.asarray(rng.standard_normal(
+            (B, cfg.encoder_seq, cfg.d_model)) * 0.02, jnp.float32)
+    return cfg, params, tokens, frames
+
+
+# ====================================================================== #
+# single-shot prefill
+# ====================================================================== #
+class TestPrefillOneShot:
+    @pytest.mark.parametrize("name,kw", FAMILY_ARCHS)
+    def test_logits_match_forward(self, name, kw):
+        cfg, params, tokens, _ = _setup(name, **kw)
+        full, _ = forward(cfg, params, {"tokens": tokens}, remat=False)
+        logits, cache = prefill(cfg, params, init_cache(cfg, B, 32), tokens)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(full),
+                                   atol=ATOL, rtol=1e-2)
+        assert int(np.asarray(cache["index"])) == T
+
+    def test_logits_match_forward_whisper(self):
+        cfg, params, tokens, frames = _setup("whisper-tiny")
+        full, _ = forward(cfg, params,
+                          {"tokens": tokens, "frames": frames}, remat=False)
+        cache = prefill_cache_whisper(cfg, params, frames, B, 32)
+        logits, _ = prefill(cfg, params, cache, tokens)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(full),
+                                   atol=ATOL, rtol=1e-2)
+
+    @pytest.mark.parametrize("name,kw", [
+        ("minicpm-2b", {}),
+        ("glm4-9b", {"sliding_window": 8}),   # ring: window < prompt len
+        ("xlstm-1.3b", {}),
+        ("zamba2-7b", {}),
+    ])
+    def test_cache_matches_per_token_prefill(self, name, kw):
+        """Decoding from the one-shot cache == decoding from the cache a
+        per-token decode_step prefill loop produced."""
+        cfg, params, tokens, _ = _setup(name, **kw)
+        _, c1 = prefill(cfg, params, init_cache(cfg, B, 32), tokens)
+        c2 = init_cache(cfg, B, 32)
+        for t in range(T):
+            _, c2 = decode_step(cfg, params, c2, tokens[:, t:t + 1])
+        nxt = jnp.full((B, 1), 3, jnp.int32)
+        l1, _ = decode_step(cfg, params, c1, nxt)
+        l2, _ = decode_step(cfg, params, c2, nxt)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ====================================================================== #
+# fused scan generation
+# ====================================================================== #
+class TestScanGeneration:
+    @pytest.mark.parametrize("name,kw", FAMILY_ARCHS)
+    def test_greedy_token_identical(self, name, kw):
+        cfg, params, tokens, frames = _setup(name, **kw)
+        common = dict(max_new_tokens=8, max_len=32, frames=frames)
+        eager = serve.generate(cfg, params, tokens, engine="eager",
+                               prefill_mode="per_token", **common)
+        scan = serve.generate(cfg, params, tokens, engine="scan",
+                              prefill_mode="one_shot", **common)
+        assert (np.asarray(eager) == np.asarray(scan)).all()
+
+    def test_greedy_token_identical_whisper(self):
+        cfg, params, tokens, frames = _setup("whisper-tiny")
+        common = dict(max_new_tokens=8, max_len=32, frames=frames)
+        eager = serve.generate(cfg, params, tokens, engine="eager",
+                               prefill_mode="per_token", **common)
+        scan = serve.generate(cfg, params, tokens, engine="scan",
+                              prefill_mode="one_shot", **common)
+        assert (np.asarray(eager) == np.asarray(scan)).all()
+
+    @pytest.mark.parametrize("name", ["minicpm-2b", "xlstm-1.3b"])
+    def test_sampled_token_identical(self, name):
+        """Seeded categorical sampling: the scan threads the PRNG key
+        through the carry in the same split order as the eager loop."""
+        cfg, params, tokens, _ = _setup(name)
+        key = jax.random.PRNGKey(7)
+        common = dict(max_new_tokens=8, max_len=32, greedy=False)
+        eager = serve.generate(cfg, params, tokens, engine="eager",
+                               prefill_mode="per_token", key=key, **common)
+        scan = serve.generate(cfg, params, tokens, engine="scan",
+                              prefill_mode="per_token", key=key, **common)
+        assert (np.asarray(eager) == np.asarray(scan)).all()
+
+    def test_jit_callables_cached_across_calls(self):
+        cfg, params, tokens, _ = _setup("minicpm-2b")
+        serve.generate(cfg, params, tokens, max_new_tokens=4, max_len=32)
+        n0 = serve.jit_cache_size()
+        # fresh-but-equal config object: keyed by config identity
+        cfg2 = _cfg("minicpm-2b")
+        serve.generate(cfg2, params, tokens, max_new_tokens=4, max_len=32)
+        assert serve.jit_cache_size() == n0
+
+
+# ====================================================================== #
+# flash-decode kernel
+# ====================================================================== #
+class TestFlashDecode:
+    def test_matches_softmax_oracle(self):
+        rng = np.random.default_rng(0)
+        b, s, h, d = 3, 96, 4, 32        # s not a block multiple: pads
+        q = jnp.asarray(rng.standard_normal((b, 1, h, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+        lengths = jnp.asarray([1, 17, 96], jnp.int32)
+        out = ops.flash_decode(q, k, v, lengths)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * d ** -0.5
+        valid = jnp.arange(s)[None, :] < lengths[:, None]
+        scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+        ref = jnp.einsum("bhqk,bkhd->bqhd",
+                         jax.nn.softmax(scores, axis=-1), v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_matches_ref_oracle_last_row(self):
+        """Decoding position len-1 against a cache of len keys must equal
+        the last row of ``ref.attention_ref`` causal attention over those
+        len positions."""
+        from repro.kernels import ref
+        rng = np.random.default_rng(2)
+        b, s, h, d = 2, 32, 2, 16
+        q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+        full = ref.attention_ref(q, k, v, causal=True)       # (b, h, s, d)
+        for length in (1, 7, 32):
+            out = ops.flash_decode(
+                q[:, :, length - 1:length].transpose(0, 2, 1, 3),
+                k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                jnp.full((b,), length, jnp.int32))
+            np.testing.assert_allclose(
+                np.asarray(out[:, 0]), np.asarray(full[:, :, length - 1]),
+                atol=1e-5, rtol=1e-5)
+
+    def test_attention_decode_kernel_equals_jnp(self):
+        rng = np.random.default_rng(1)
+        d_model, nh, nkv, hd = 64, 4, 2, 16     # GQA
+        p = attention_init(jax.random.PRNGKey(0), d_model, nh, nkv, hd)
+        x = jnp.asarray(rng.standard_normal((B, 1, d_model)), jnp.float32)
+        cache = {"k": jnp.asarray(rng.standard_normal((B, 24, nkv, hd)),
+                                  jnp.float32),
+                 "v": jnp.asarray(rng.standard_normal((B, 24, nkv, hd)),
+                                  jnp.float32)}
+        for index in (jnp.asarray(5), jnp.asarray([3, 11])):
+            a, ca = attention_decode(p, x, None, None, cache, index,
+                                     n_heads=nh, n_kv_heads=nkv,
+                                     head_dim=hd, use_kernel=True)
+            b_, cb = attention_decode(p, x, None, None, cache, index,
+                                      n_heads=nh, n_kv_heads=nkv,
+                                      head_dim=hd, use_kernel=False)
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=1e-5, rtol=1e-5)
+            np.testing.assert_allclose(np.asarray(ca["k"]),
+                                       np.asarray(cb["k"]))
+
+    @pytest.mark.parametrize("name", ["minicpm-2b", "zamba2-7b",
+                                      "whisper-tiny"])
+    def test_decode_step_kernel_logits(self, name):
+        cfg, params, tokens, frames = _setup(name)
+        if cfg.is_encoder_decoder:
+            cache = prefill_cache_whisper(cfg, params, frames, B, 32)
+        else:
+            cache = init_cache(cfg, B, 32)
+        _, cache = prefill(cfg, params, cache, tokens)
+        nxt = jnp.full((B, 1), 5, jnp.int32)
+        lk, _ = decode_step(cfg, params, cache, nxt, use_kernels=True)
+        lj, _ = decode_step(cfg, params, cache, nxt, use_kernels=False)
+        np.testing.assert_allclose(np.asarray(lk), np.asarray(lj),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_generate_kernel_token_identical(self):
+        cfg, params, tokens, _ = _setup("minicpm-2b")
+        common = dict(max_new_tokens=8, max_len=32)
+        ref = serve.generate(cfg, params, tokens, **common)
+        kern = serve.generate(cfg, params, tokens, use_kernels=True,
+                              **common)
+        assert (np.asarray(ref) == np.asarray(kern)).all()
+
+
+# ====================================================================== #
+# continuous batching
+# ====================================================================== #
+class TestContinuousBatching:
+    @pytest.mark.parametrize("name,kw", [
+        ("minicpm-2b", {}),
+        ("glm4-9b", {"sliding_window": 8}),
+        ("xlstm-1.3b", {}),
+        ("zamba2-7b", {}),
+    ])
+    def test_slot_reuse_never_leaks(self, name, kw):
+        """More requests than slots: every request's tokens must equal its
+        solo generation — a reused slot must not expose the previous
+        occupant's cache rows."""
+        cfg = _cfg(name, **kw)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        eng = DecodeEngine(cfg, params, n_slots=2, max_len=32, segment=4)
+        prompts = [rng.integers(0, cfg.vocab, (pl,))
+                   for pl in (5, 8, 3, 8, 6)]
+        news = [7, 4, 9, 6, 5]
+        rids = [eng.submit(p, n) for p, n in zip(prompts, news)]
+        out = eng.run()
+        assert eng.stats["admitted"] == len(prompts)
+        assert not eng.active.any() and not eng.queue
+        for rid, p, n in zip(rids, prompts, news):
+            solo = serve.generate(
+                cfg, params, jnp.asarray(p, jnp.int32)[None, :],
+                max_new_tokens=n, max_len=32)
+            assert out[rid] == [int(t) for t in np.asarray(solo)[0]], \
+                f"request {rid} diverged from its solo generation"
+
+    def test_admission_between_segments(self):
+        cfg = _cfg("minicpm-2b")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(1)
+        eng = DecodeEngine(cfg, params, n_slots=2, max_len=32, segment=4)
+        for _ in range(3):
+            eng.submit(rng.integers(0, cfg.vocab, (4,)), 4)
+        eng.step_segment()              # admits 2 of 3, queue holds 1
+        assert eng.stats["admitted"] == 2 and len(eng.queue) == 1
+        assert not eng.active.all() or len(eng.queue) == 1
+        eng.run()
+        assert eng.stats["admitted"] == 3
+        assert all(len(v) == 4 for v in eng.outputs.values())
+
+    def test_rejects_encoder_decoder(self):
+        cfg = _cfg("whisper-tiny")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        with pytest.raises(AssertionError):
+            DecodeEngine(cfg, params, n_slots=2, max_len=32)
+
+
+# ====================================================================== #
+# memoized interference calibration
+# ====================================================================== #
+class TestCalibrationMemo:
+    def test_calibrate_measures_solo_once_per_spec(self, monkeypatch):
+        from repro.core import coschedule
+
+        solo_calls = []
+        pair_solo_kwargs = []
+        monkeypatch.setattr(
+            coschedule, "measure_solo",
+            lambda spec, iters=3: solo_calls.append(spec) or 1.0)
+
+        def fake_pair(a, b, iters=3, *, t_a_solo=None, t_b_solo=None):
+            pair_solo_kwargs.append((t_a_solo, t_b_solo))
+            return {"xi_a": 2.0, "xi_b": 2.0}
+        monkeypatch.setattr(coschedule, "measure_pair", fake_pair)
+
+        specs = {n: object() for n in ("a", "b", "c")}
+        coschedule.calibrate_interference(specs, iters=1)
+        assert len(solo_calls) == 3                       # O(n), not O(n²)
+        assert len(pair_solo_kwargs) == 6                 # n(n+1)/2 pairs
+        assert all(ta == 1.0 and tb == 1.0
+                   for ta, tb in pair_solo_kwargs)
+
+    def test_measure_pair_skips_solo_when_precomputed(self, monkeypatch):
+        from repro.core import coschedule
+
+        def boom(spec, iters=3):
+            raise AssertionError("measure_solo should not run")
+        monkeypatch.setattr(coschedule, "measure_solo", boom)
+        cfg = _cfg("minicpm-2b")
+        spec = coschedule.JobSpec(cfg, batch=1, seq=16)
+        r = coschedule.measure_pair(spec, spec, iters=1,
+                                    t_a_solo=0.5, t_b_solo=0.5)
+        assert r["t_a_solo"] == 0.5 and r["t_b_solo"] == 0.5
+        assert r["t_pair"] > 0
