@@ -16,9 +16,9 @@ def main(argv=None) -> int:
                     help="skip the 480-job table and xi calibration")
     args = ap.parse_args(argv)
 
-    from . import (fig4_fig5_jct_queue, fig6a_load, fig6b_xi, roofline,
-                   sim_throughput, table2_physical, table3_240, table4_480,
-                   xi_calibration)
+    from . import (fig4_fig5_jct_queue, fig6a_load, fig6b_xi,
+                   replay_validation, roofline, sim_throughput,
+                   table2_physical, table3_240, table4_480, xi_calibration)
 
     stages = [
         ("table2_physical (Table II)", table2_physical.run),
@@ -29,8 +29,10 @@ def main(argv=None) -> int:
     ]
     if not args.skip_slow:
         stages.insert(2, ("table4_480 (Table IV)", table4_480.run))
-        stages.append(("xi_calibration (co-schedule testbed)",
+        stages.append(("xi_calibration (calibration pipeline)",
                        xi_calibration.run))
+        stages.append(("replay_validation (closed-loop executor replay)",
+                       replay_validation.run))
         stages.append(("sim_throughput (engine before/after)",
                        sim_throughput.run))
     stages.append(("roofline (§Roofline from dry-run)", roofline.run))

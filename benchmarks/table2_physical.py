@@ -1,22 +1,51 @@
 """Table II — the physical-cluster experiment (16 GPUs, 30 jobs):
-makespan and average JCT per policy. Our 'physical' cluster is the
-calibrated simulator over the 2080 Ti hardware model (DESIGN.md §8);
-the expected ordering is the paper's: sharing policies (SJF-FFS,
-SJF-BSBF) beat exclusive ones, SJF-BSBF beats SJF-FFS."""
+makespan and average JCT per policy.
+
+Two modes:
+
+* paper mode (default) — the calibrated simulator over the 2080 Ti
+  hardware model and the synthesized paper-task profiles (DESIGN.md §8);
+  the expected ordering is the paper's: sharing policies (SJF-FFS,
+  SJF-BSBF) beat exclusive ones, SJF-BSBF beats SJF-FFS.
+
+* calibrated mode (``--calibrated [PATH]``) — the closed loop of
+  DESIGN.md §13: job performance comes from a HOST-MEASURED calibration
+  artifact (fitted Eq.-3 alpha/beta per arch via the schedule executor,
+  measured pairwise xi on fused pair programs) instead of the
+  synthesized tables; ``InterferenceModel.from_artifact`` replaces
+  ``paper_interference_model`` on this path, and the artifact's fitted
+  coefficients are embedded in the benchmark payload."""
 from __future__ import annotations
 
-from repro.core import physical_trace
+import argparse
+import os
 
-from .common import run_all_policies, save_json, summaries, table
+from repro.core import InterferenceModel, calibrated_trace, physical_trace
+from repro.core.calibration import load_artifact
+
+from .common import ARTIFACTS, run_all_policies, save_json, summaries, table
+
+DEFAULT_CALIBRATION = os.path.join(ARTIFACTS, "calibration.json")
 
 
-def run(seed: int = 0, verbose: bool = True):
+def _calibrated_capacity(payload) -> float:
+    """Capacity admitting every measured arch at full batch with head-
+    room for one half-batch co-tenant — the same C=2 sharing regime the
+    paper's 11 GB cards give its tasks."""
+    needs = [e["mem_base"] + e["mem_per_sample"] * e["batch"]
+             for e in payload["archs"].values()]
+    halves = [e["mem_per_sample"] * max(1, e["batch"] // 2)
+              + e["mem_base"] for e in payload["archs"].values()]
+    return max(needs) + max(halves) + 0.25 * max(
+        e["mem_per_sample"] for e in payload["archs"].values())
+
+
+def run(seed: int = 0, verbose: bool = True, calibrated: str | None = None):
     jobs = physical_trace(seed=seed)
     results = run_all_policies(jobs, n_servers=4, gpus_per_server=4)
     if verbose:
         print(table(results, "Table II (physical 16-GPU cluster, 30 jobs)"))
     payload = summaries(results)
-    save_json("table2_physical.json", payload)
     # the paper's headline checks
     s = payload
     ok_sharing = s["sjf-bsbf"]["avg_jct"] < s["sjf"]["avg_jct"]
@@ -24,8 +53,46 @@ def run(seed: int = 0, verbose: bool = True):
     if verbose:
         print(f"  sharing beats exclusive: {ok_sharing}; "
               f"BSBF <= FFS(+5%): {ok_wise}")
+
+    if calibrated:
+        cal = load_artifact(calibrated)
+        cjobs = calibrated_trace(cal, n_jobs=30, seed=seed, load=6.0)
+        # a 4-GPU host-scale cluster: the measured jobs are small, so
+        # contention (and the sharing policies' edge) needs a small box
+        cresults = run_all_policies(
+            cjobs, n_servers=2, gpus_per_server=2,
+            interference=InterferenceModel.from_artifact(cal),
+            capacity_gb=_calibrated_capacity(cal) / 2 ** 30)
+        if verbose:
+            print(table(cresults, "Table II (host-calibrated profiles, "
+                                  "30 jobs, 4 GPUs)"))
+        payload = {
+            "paper": payload,
+            "calibrated": summaries(cresults),
+            "calibration": {
+                "artifact": calibrated,
+                "archs": {n: {k: e[k] for k in ("alpha_comp", "beta_comp",
+                                                "t_iter_solo")}
+                          for n, e in cal["archs"].items()},
+                "pairs": {k: {kk: e[kk] for kk in ("xi_a", "xi_b")}
+                          for k, e in cal["pairs"].items()},
+            },
+        }
+    save_json("table2_physical.json", payload)
     return payload
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--calibrated", nargs="?", const=DEFAULT_CALIBRATION,
+                    default=None, metavar="PATH",
+                    help="also run the trace over host-measured profiles "
+                         "from a calibration artifact (default: "
+                         f"{DEFAULT_CALIBRATION})")
+    args = ap.parse_args(argv)
+    run(seed=args.seed, calibrated=args.calibrated)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,47 +1,83 @@
-"""Interference-ratio calibration on the co-schedule mini-testbed: run two
-real (reduced) training jobs as one fused program on this host, measure
-structural xi (Fig. 3 analogue), and verify the structural model brackets
-the measurement."""
+"""Closed-loop calibration entry point (DESIGN.md §13): run the
+calibration pipeline — really train each (reduced) arch on this host
+through the schedule executor, fit the Eq.-3 alpha/beta from the
+measured sub-batch sweep, measure pairwise xi on the fused pair
+programs — and persist the **versioned artifact**
+``artifacts/bench/calibration.json`` that the simulator side loads
+(``InterferenceModel.from_artifact``, ``repro.core.calibrated_trace``).
+Also writes the historical ``xi_calibration.json`` summary with the
+structural-model predictions next to the measurements (Fig. 3
+analogue)."""
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import os
 
 from repro.configs import get_config
-from repro.core.coschedule import JobSpec, measure_pair, structural_xi
+from repro.core.calibration import run_calibration, save_artifact
+from repro.core.coschedule import JobSpec
 
-from .common import save_json
+from .common import ARTIFACTS, save_json
 
-PAIRS = (("minicpm-2b", "qwen2-vl-2b"),
-         ("minicpm-2b", "minicpm-2b"))
+ARCHS = ("minicpm-2b", "qwen2-vl-2b")
+CALIBRATION_PATH = os.path.join(ARTIFACTS, "calibration.json")
 
 
-def run(verbose: bool = True, iters: int = 6):
-    # iters default was 2 when each step went through the slow jnp path;
-    # with the trainable kernel path and donated train steps the per-step
-    # cost is low enough to average over more iterations.
-    payload = {}
-    for a, b in PAIRS:
-        sa = JobSpec(dataclasses.replace(get_config(a).reduced(),
-                                         dtype="float32"),
-                     batch=4, seq=64, seed=0)
-        sb = JobSpec(dataclasses.replace(get_config(b).reduced(),
-                                         dtype="float32"),
-                     batch=4, seq=64, accum_steps=2, seed=1)
-        r = measure_pair(sa, sb, iters=iters)
-        # structural prediction from solo times only
-        pred_a = structural_xi(r["t_a_solo"], r["t_b_solo"])
-        pred_b = structural_xi(r["t_b_solo"], r["t_a_solo"])
-        # t_a_solo / t_b_solo / t_pair are per-step walltimes (seconds),
-        # averaged over `iters` post-warmup steps
-        payload[f"{a}+{b}"] = {**r, "xi_a_structural": pred_a,
-                               "xi_b_structural": pred_b}
+def build_specs(archs=ARCHS, batch: int = 4, seq: int = 64):
+    specs = {}
+    for i, name in enumerate(archs):
+        cfg = dataclasses.replace(get_config(name).reduced(),
+                                  dtype="float32")
+        specs[name] = JobSpec(cfg, batch=batch, seq=seq, seed=i)
+    return specs
+
+
+def run(verbose: bool = True, iters: int = 6, smoke: bool = False):
+    if smoke:
+        # CI configuration: 2 tiny archs, 1 cross pair, short timing loop
+        specs = build_specs(batch=2, seq=32)
+        payload = run_calibration(specs, iters=2,
+                                  pairs=[tuple(sorted(specs))])
+    else:
+        specs = build_specs()
+        payload = run_calibration(specs, iters=iters)
+    save_artifact(payload, CALIBRATION_PATH)
+
+    summary = {}
+    for key, entry in payload["pairs"].items():
+        summary[key] = dict(entry)
         if verbose:
-            print(f"{a}+{b}: measured xi=({r['xi_a']:.2f},{r['xi_b']:.2f}) "
-                  f"structural=({pred_a:.2f},{pred_b:.2f}) "
-                  f"[{iters} iters, pair {r['t_pair']:.3f}s/step]")
-    save_json("xi_calibration.json", payload)
+            print(f"{key}: measured xi=({entry['xi_a']:.2f},"
+                  f"{entry['xi_b']:.2f}) structural="
+                  f"({entry['xi_a_structural']:.2f},"
+                  f"{entry['xi_b_structural']:.2f}) "
+                  f"[pair {entry['t_pair']:.3f}s/step]")
+    for name, entry in payload["archs"].items():
+        if verbose:
+            print(f"{name}: t_comp(b) ~= {entry['alpha_comp']:.4f} + "
+                  f"{entry['beta_comp']:.4f}*b  (sweep over "
+                  f"{entry['sweep']['sub_batches']})")
+    save_json("xi_calibration.json", {
+        "pairs": summary,
+        "archs": {n: {k: e[k] for k in ("alpha_comp", "beta_comp",
+                                        "t_iter_solo", "sweep")}
+                  for n, e in payload["archs"].items()},
+        "calibration_artifact": CALIBRATION_PATH,
+    })
+    if verbose:
+        print(f"calibration artifact -> {CALIBRATION_PATH}")
     return payload
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--iters", type=int, default=6)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: 2 tiny archs, 1 pair, 2 iters")
+    args = ap.parse_args(argv)
+    run(iters=args.iters, smoke=args.smoke)
+
+
 if __name__ == "__main__":
-    run()
+    main()

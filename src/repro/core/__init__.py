@@ -1,7 +1,14 @@
 """Core reproduction of 'Scheduling Deep Learning Jobs in Multi-Tenant GPU
 Clusters via Wise Resource Sharing' (SJF-BSBF)."""
-from .batch_scaling import SharingConfig, best_sharing_config
-from .interference import InterferenceModel, paper_interference_model
+from .batch_scaling import (DonorScaledConfig, SharingConfig,
+                            best_sharing_config,
+                            best_sharing_config_donor_scaled)
+from .calibration import (CALIBRATION_VERSION, MeasuredTaskProfile,
+                          load_artifact, perf_params_from_artifact,
+                          profiles_from_artifact, run_calibration,
+                          save_artifact)
+from .interference import (InterferenceModel, paper_interference_model,
+                           structural_xi)
 from .job import ClusterState, Job, JobState
 from .pair import PairDecision, PairJob, best_pair_schedule, pair_timeline
 try:   # the vectorized decision core needs numpy; scalar core does not
@@ -24,24 +31,29 @@ from .simulator import SchedulerBase, SimResults, Simulator
 from .sweep import (ScenarioSpec, grid, run_scenario, run_sweep,
                     rows_by_policy, summary_table, write_csv, write_json)
 from .tasks import PAPER_TASK_PROFILES, TaskProfile, profile_from_arch
-from .trace import (TraceConfig, datacenter_trace, generate_trace,
-                    physical_trace, simulation_trace)
+from .trace import (TraceConfig, calibrated_trace, datacenter_trace,
+                    generate_trace, physical_trace, simulation_trace)
 
 __all__ = [
-    "ALL_POLICIES", "ClusterState",
+    "ALL_POLICIES", "CALIBRATION_VERSION", "ClusterState",
+    "DonorScaledConfig",
     "ENGINES", "FIFO", "GPU_2080TI",
     "HardwareSpec", "HeapEngine", "InterferenceModel", "Job", "JobState",
-    "PAPER_TASK_PROFILES",
+    "MeasuredTaskProfile", "PAPER_TASK_PROFILES",
     "PairDecision", "PairJob", "PerfParams", "PolluxLike", "SJF", "SJF_BSBF", "SRSF",
     "SJF_FFS", "ScanEngine", "ScenarioSpec", "SchedulerBase",
     "SharingConfig", "SimResults", "Simulator",
     "TPU_V5E", "TaskProfile", "Tiresias", "TraceConfig",
     "best_pair_schedule", "best_sharing_config",
+    "best_sharing_config_donor_scaled", "calibrated_trace",
     "datacenter_trace", "derive_perf_params",
     "fit_comp_params", "generate_trace", "grid", "infer_xi",
-    "make_scheduler",
-    "pair_timeline", "paper_interference_model", "physical_trace",
-    "profile_from_arch", "ring_allreduce_bytes", "rows_by_policy",
-    "run_scenario", "run_sweep", "simulation_trace", "summary_table",
+    "load_artifact", "make_scheduler",
+    "pair_timeline", "paper_interference_model",
+    "perf_params_from_artifact", "physical_trace",
+    "profile_from_arch", "profiles_from_artifact", "ring_allreduce_bytes",
+    "rows_by_policy",
+    "run_calibration", "run_scenario", "run_sweep", "save_artifact",
+    "simulation_trace", "structural_xi", "summary_table",
     "t_iter_at_workers", "write_csv", "write_json",
 ] + _PAIR_BATCH_ALL

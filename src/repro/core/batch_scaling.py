@@ -20,7 +20,7 @@ from typing import Optional
 
 from .interference import InterferenceModel
 from .job import Job
-from .pair import PairDecision, PairJob, best_pair_schedule
+from .pair import PairDecision, PairJob, best_pair_schedule, pair_timeline
 
 
 @dataclass(frozen=True)
@@ -99,4 +99,90 @@ def best_sharing_config(
     if best is None:
         # No sub-batch fits next to the running job -> cannot share.
         return SharingConfig(False, new.batch, 1, float("inf"), None)
+    return best
+
+
+@dataclass(frozen=True)
+class DonorScaledConfig:
+    """Result of the donor-rescaling extension: like
+    :class:`SharingConfig` plus the DONOR's new sub-batch."""
+
+    share: bool
+    donor_sub_batch: int        # running job's new b (its B is unchanged)
+    sub_batch: int              # new job's b
+    accum_steps: int
+    avg_jct: float
+    xi_run: float = 1.0
+    xi_new: float = 1.0
+
+
+def best_sharing_config_donor_scaled(
+    running: Job,
+    new: Job,
+    interference: InterferenceModel,
+    gpu_capacity_bytes: float,
+) -> DonorScaledConfig:
+    """Algorithm-2 extension (DESIGN.md §13): when no sub-batch of the
+    new job fits beside the donor's *current* footprint, sweep the
+    DONOR's sub-batch down too — the donor accepts extra gradient
+    accumulation (slower iterations, unchanged effective batch) to make
+    memory room for the sharer. This is a mid-run (τ, sub-batch)
+    reconfiguration of the running job: the scheduler applies it via
+    ``Simulator.reconfigure_job`` at the sharing time point, and the
+    physical executor re-fuses the group program with the new
+    accumulation while carrying the donor's params/opt state through.
+
+    The sequential baseline prices the donor at its CURRENT sub-batch
+    (declining to share leaves it untouched), so the donor's slowdown is
+    charged against the sharing benefit — a pair only shares when the
+    benefit survives the reconfiguration cost."""
+    rem_run = running.remaining_iters
+    t_run_cur = running.solo_t_iter
+    fixed_xi = interference.pair_fixed(running.model, new.model)
+    best: Optional[DonorScaledConfig] = None
+
+    for b_run in candidate_sub_batches(running.batch):
+        if b_run >= running.sub_batch:
+            continue   # only shrinking the donor can unlock memory
+        run_mem = running.perf.mem_bytes(b_run)
+        t_run = running.t_iter_sub(b_run)
+        for b_new in candidate_sub_batches(new.batch):
+            new_mem = new.perf.mem_bytes(b_new)
+            if run_mem + new_mem > gpu_capacity_bytes:
+                continue
+            t_new = new.t_iter_sub(b_new)
+            if fixed_xi is not None:
+                xi_run, xi_new = fixed_xi
+            else:
+                mem_frac = (run_mem + new_mem) / gpu_capacity_bytes
+                xi_run = interference.xi(
+                    running.model, new.model,
+                    t_me=t_run, t_other=t_new, mem_frac=mem_frac)
+                xi_new = interference.xi(
+                    new.model, running.model,
+                    t_me=t_new, t_other=t_run, mem_frac=mem_frac)
+            # share endpoint: both reconfigured, concurrent from kappa=0
+            t_a0, t_b0 = pair_timeline(
+                PairJob(t_iter=t_run, iters=rem_run, xi=xi_run),
+                PairJob(t_iter=t_new, iters=new.iters, xi=xi_new), 0.0)
+            avg0 = 0.5 * (t_a0 + t_b0)
+            # sequential endpoint: donor untouched at its current b
+            t_a1 = rem_run * t_run_cur
+            avg1 = 0.5 * (t_a1 + (t_a1 + new.iters * t_new))
+            if avg0 > avg1:
+                continue   # reconfiguration cost eats the benefit
+            cfg = DonorScaledConfig(
+                share=True, donor_sub_batch=b_run, sub_batch=b_new,
+                accum_steps=max(1, math.ceil(new.batch / b_new)),
+                avg_jct=avg0, xi_run=xi_run, xi_new=xi_new)
+            if best is None or cfg.avg_jct < best.avg_jct:
+                best = cfg
+            if fixed_xi is not None:
+                # b-independent xi: the largest feasible b_new is optimal
+                # for this b_run (same monotonicity as the plain sweep)
+                break
+
+    if best is None:
+        return DonorScaledConfig(False, running.sub_batch, new.batch, 1,
+                                 float("inf"))
     return best

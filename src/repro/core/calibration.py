@@ -1,0 +1,245 @@
+"""Closed-loop calibration pipeline (DESIGN.md §13).
+
+The simulator's performance model has two measured inputs the paper
+obtains on its 2080 Ti testbed: the Eq.-3 compute coefficients
+(t_comp(b) = alpha + beta*b, fitted from a sub-batch throughput sweep)
+and the pairwise interference ratios xi (Eqs. 5-6, measured by really
+co-locating job pairs). This module produces both on THIS host by
+driving the schedule executor (:mod:`repro.launch.cluster`) over real
+reduced-architecture training jobs, and persists them as a **versioned
+artifact** (``artifacts/bench/calibration.json``) that the simulator
+side loads back:
+
+* ``InterferenceModel.from_artifact`` fills the xi pair table;
+* :func:`perf_params_from_artifact` rebuilds Eq.-3/4/7 ``PerfParams``
+  from the fitted alpha/beta (single-host jobs: the comm term is inside
+  the measured step, so t_comm = 0);
+* :class:`MeasuredTaskProfile` duck-types ``repro.core.tasks.
+  TaskProfile`` so the trace builders (``repro.core.trace``) generate
+  workloads over measured profiles instead of the synthesized tables.
+
+Artifact schema (version 1)::
+
+    {"version": 1, "host": {...}, "iters": n,
+     "archs": {name: {"arch", "batch", "seq",
+                      "sweep": {"sub_batches": [...], "times": [...]},
+                      "alpha_comp", "beta_comp", "t_iter_solo",
+                      "param_bytes", "mem_base", "mem_per_sample"}},
+     "pairs": {"a+b": {"a", "b", "t_a_solo", "t_b_solo", "t_pair",
+                       "xi_a", "xi_b",
+                       "xi_a_structural", "xi_b_structural"}}}
+
+Module-level imports stay jax-free: the artifact/fit/profile side is
+usable by the (numpy-less, jax-less) simulator core, while the
+measurement entry point imports the executor lazily.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .perf_model import GPU_2080TI, HardwareSpec, PerfParams, fit_comp_params
+
+CALIBRATION_VERSION = 1
+
+
+# ---------------------------------------------------------------------- #
+# Artifact I/O
+# ---------------------------------------------------------------------- #
+def save_artifact(payload: Dict, path: str) -> str:
+    if payload.get("version") != CALIBRATION_VERSION:
+        raise ValueError(f"refusing to save artifact with version "
+                         f"{payload.get('version')!r}")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def load_artifact(path: str) -> Dict:
+    with open(path) as f:
+        payload = json.load(f)
+    version = payload.get("version")
+    if version != CALIBRATION_VERSION:
+        raise ValueError(
+            f"unsupported calibration artifact version {version!r} "
+            f"(expected {CALIBRATION_VERSION})")
+    return payload
+
+
+# ---------------------------------------------------------------------- #
+# Simulator-side consumers
+# ---------------------------------------------------------------------- #
+def perf_params_from_artifact(entry: Dict, *, delta: float = 2.0
+                              ) -> PerfParams:
+    """Eq.-3/4/7 coefficients from one measured arch entry. Single-host
+    measurements fold any collective cost into the fitted alpha/beta, so
+    the explicit comm term is zero."""
+    return PerfParams(
+        alpha_comp=float(entry["alpha_comp"]),
+        beta_comp=float(entry["beta_comp"]),
+        alpha_comm=0.0,
+        beta_comm=0.0,
+        msg_bytes=0.0,
+        delta=delta,
+        mem_base=float(entry["mem_base"]),
+        mem_per_sample=float(entry["mem_per_sample"]),
+        param_bytes=float(entry["param_bytes"]),
+        n_workers=1,
+    )
+
+
+@dataclass(frozen=True)
+class MeasuredTaskProfile:
+    """Duck-types :class:`repro.core.tasks.TaskProfile` for the trace
+    builders, but returns the HOST-measured PerfParams whatever the GPU
+    count / hardware spec asked for — the measurement already is the
+    physical truth for this host's jobs."""
+
+    name: str
+    default_batch: int
+    params: PerfParams
+
+    def perf_params(self, n_gpus: int,
+                    hw: HardwareSpec = GPU_2080TI) -> PerfParams:
+        return self.params
+
+
+def profiles_from_artifact(payload: Dict) -> Dict[str, MeasuredTaskProfile]:
+    return {
+        name: MeasuredTaskProfile(
+            name=name,
+            default_batch=int(entry["batch"]),
+            params=perf_params_from_artifact(entry))
+        for name, entry in payload["archs"].items()
+    }
+
+
+# ---------------------------------------------------------------------- #
+# Measurement pipeline (imports the executor lazily — jax territory)
+# ---------------------------------------------------------------------- #
+def _sweep_points(batch: int, sub_batches: Optional[Sequence[int]]
+                  ) -> List[int]:
+    if sub_batches is not None:
+        pts = sorted({int(b) for b in sub_batches if 1 <= b <= batch},
+                     reverse=True)
+    else:
+        from .batch_scaling import candidate_sub_batches
+        pts = candidate_sub_batches(batch)
+    if len(pts) < 2:
+        raise ValueError(
+            f"need >= 2 sub-batch sweep points for the Eq.-3 fit; "
+            f"batch={batch} gives {pts}")
+    return pts
+
+
+def run_calibration(
+    specs: Dict[str, "JobSpec"],
+    *,
+    iters: int = 3,
+    sub_batches: Optional[Sequence[int]] = None,
+    pairs: Optional[Sequence[Tuple[str, str]]] = None,
+) -> Dict:
+    """Measure everything the simulator needs, on this host.
+
+    Per arch: a sub-batch sweep (each point really trains the model at
+    per-step batch b, accum=1, timing post-warmup fused steps via the
+    executor) fitted to t_comp(b) = alpha + beta*b; the solo iteration
+    time at the spec's own (batch, accum); and analytic memory
+    coefficients (param/optimizer bytes from the real parameter count,
+    activation bytes per sample from the config dims). Per pair (default
+    all unordered pairs incl. self-pairings, or an explicit list): the
+    fused pair program's step time and the xi ratios. Each model is
+    initialized ONCE; measurements consume cheap copies of the pristine
+    master state (donation invalidates buffers)."""
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import make_batch
+    from repro.launch.cluster import JobSpec, _make_state  # noqa: F401
+    from repro.models import param_count
+
+    from .coschedule import measure_pair, measure_solo, structural_xi
+
+    def copy_state(state, batch=None):
+        params, opt, master_batch = state
+        clone = jax.tree.map(jnp.array, (params, opt))
+        return clone[0], clone[1], master_batch if batch is None else batch
+
+    names = sorted(specs)
+    masters = {n: _make_state(specs[n]) for n in names}
+    archs: Dict[str, Dict] = {}
+    solo: Dict[str, float] = {}
+
+    for name in names:
+        spec = specs[name]
+        cfg = spec.cfg
+        pts = _sweep_points(spec.batch, sub_batches)
+        times = []
+        for b in pts:
+            # per-micro-step time at sub-batch b: one step at batch=b,
+            # no accumulation (Eq. 3 is about the micro-step); params/opt
+            # are copies of the master state (their shapes are
+            # batch-independent), only the data tensor is rebuilt at b
+            sub_spec = _dc.replace(spec, batch=b, accum_steps=1)
+            state = copy_state(masters[name],
+                               batch=make_batch(cfg, b, spec.seq,
+                                                seed=spec.seed))
+            times.append(measure_solo(sub_spec, iters, state=state))
+        alpha, beta = fit_comp_params([float(b) for b in pts], times)
+        if spec.accum_steps == 1 and pts[0] == spec.batch:
+            # the sweep's first point IS the spec's own configuration
+            solo[name] = times[0]
+        else:
+            solo[name] = measure_solo(spec, iters,
+                                      state=copy_state(masters[name]))
+        n_params = param_count(masters[name][0])
+        param_bytes = 4.0 * n_params
+        # params + grads + AdamW moments, plus a small framework floor
+        mem_base = 4.0 * param_bytes + 64 * 2 ** 20
+        act_per_sample = 4.0 * spec.seq * cfg.d_model * (cfg.n_layers + 2)
+        archs[name] = {
+            "arch": cfg.name,
+            "batch": spec.batch,
+            "seq": spec.seq,
+            "accum_steps": spec.accum_steps,
+            "sweep": {"sub_batches": pts, "times": times},
+            "alpha_comp": alpha,
+            "beta_comp": beta,
+            "t_iter_solo": solo[name],
+            "n_params": int(n_params),
+            "param_bytes": param_bytes,
+            "mem_base": mem_base,
+            "mem_per_sample": act_per_sample,
+        }
+
+    if pairs is None:
+        pairs = [(a, b) for i, a in enumerate(names) for b in names[i:]]
+    pair_entries: Dict[str, Dict] = {}
+    for a, b in pairs:
+        r = measure_pair(specs[a], specs[b], iters=iters,
+                         t_a_solo=solo[a], t_b_solo=solo[b],
+                         state_a=copy_state(masters[a]),
+                         state_b=copy_state(masters[b]))
+        pair_entries[f"{a}+{b}"] = {
+            "a": a, "b": b, **r,
+            "xi_a_structural": structural_xi(r["t_a_solo"], r["t_b_solo"]),
+            "xi_b_structural": structural_xi(r["t_b_solo"], r["t_a_solo"]),
+        }
+
+    return {
+        "version": CALIBRATION_VERSION,
+        "created": time.time(),
+        "host": {
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+        },
+        "iters": iters,
+        "archs": archs,
+        "pairs": pair_entries,
+    }

@@ -1,111 +1,88 @@
-"""Step-interleaved co-scheduled execution — the TPU analogue of the
-paper's GPU sharing (DESIGN.md §4).
+"""Pair-shaped facade over the schedule-driven executor (DESIGN.md §4, §13).
 
-A TPU core runs one program at a time (no MPS/time-slicing), so "two jobs
-share a slice" becomes ONE jitted SPMD program that advances both jobs'
-training states each call: job A runs its step, then job B runs its
-(possibly gradient-accumulated, sub-batched) step. The interference ratio
-of Eqs. 5-6 is then *structural*:
+A TPU core runs one program at a time (no MPS/time-slicing), so "jobs
+share a slice" becomes ONE jitted SPMD program that advances every
+tenant's training state each call. The N-way fused program, the schedule
+timeline, and the mid-run (τ, sub-batch) reconfiguration live in
+:mod:`repro.launch.cluster` (:class:`~repro.launch.cluster.
+ScheduleExecutor`); this module keeps the historical 2-job measurement
+API on top of it:
 
     xi_A = t_pair / t_A_solo      (and symmetrically for B)
 
 with t_pair >= t_A + t_B for pure time multiplexing; the measured ratios
 feed the scheduler's ``InterferenceModel`` exactly as the paper feeds
-measured 2080 Ti ratios into its simulator.
-
-This module is also the "physical testbed": `measure_pair` really trains
-two models on this host and times the fused program.
+measured 2080 Ti ratios into its simulator. The full closed loop —
+fitting Eq.-3 alpha/beta from a measured sub-batch sweep, persisting the
+versioned ``calibration.json`` artifact, and loading it back into the
+simulator — is :mod:`repro.core.calibration`.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import ArchConfig
-from repro.data import make_batch
-from repro.models import init_params
-from repro.train import (TrainConfig, adamw_init, make_jit_train_step,
-                         make_train_step)
+from repro.launch.cluster import (JobSpec, ScheduleExecutor, _make_state,
+                                  make_group_step)
 
 from .interference import InterferenceModel
+from .interference import structural_xi as _structural_xi
 
-
-@dataclass
-class JobSpec:
-    cfg: ArchConfig
-    batch: int                  # per-step user batch
-    accum_steps: int = 1        # gradient-accumulation sub-steps
-    seq: int = 128
-    seed: int = 0
-
-    def train_config(self) -> TrainConfig:
-        return TrainConfig(accum_steps=self.accum_steps)
-
-
-def _make_state(spec: JobSpec):
-    params = init_params(spec.cfg, jax.random.PRNGKey(spec.seed))
-    opt = adamw_init(params)
-    batch = make_batch(spec.cfg, spec.batch, spec.seq, seed=spec.seed)
-    return params, opt, batch
+__all__ = ["JobSpec", "calibrate_interference", "make_pair_step",
+           "measure_group", "measure_pair", "measure_solo", "structural_xi"]
 
 
 def make_pair_step(spec_a: JobSpec, spec_b: JobSpec, *, donate: bool = False):
-    """One jitted program stepping BOTH jobs (time-multiplexed).
+    """One jitted program stepping BOTH jobs (time-multiplexed) — the
+    2-job case of :func:`repro.launch.cluster.make_group_step`, kept for
+    the historical flat signature:
 
-    ``donate=True`` donates both jobs' params/opt-states (in-place
-    accumulation + AdamW update, the production configuration); callers
-    must then re-bind all four from the outputs each call."""
-    step_a = make_train_step(spec_a.cfg, spec_a.train_config())
-    step_b = make_train_step(spec_b.cfg, spec_b.train_config())
-
-    def pair_step(pa, oa, ba, pb, ob, bb):
-        pa, oa, ma = step_a(pa, oa, ba)
-        pb, ob, mb = step_b(pb, ob, bb)
-        return pa, oa, ma, pb, ob, mb
-
-    return jax.jit(pair_step, donate_argnums=(0, 1, 3, 4) if donate else ())
+        (pa, oa, ba, pb, ob, bb) -> (pa, oa, ma, pb, ob, mb)
+    """
+    return make_group_step([spec_a, spec_b], donate=donate)
 
 
-def measure_solo(spec: JobSpec, iters: int = 3) -> float:
-    """Mean seconds per solo training step (donated train step; state is
-    threaded through the timing loop because donation invalidates the
-    input buffers)."""
-    params, opt, batch = _make_state(spec)
-    step = make_jit_train_step(spec.cfg, spec.train_config())
-    params, opt, _ = step(params, opt, batch)        # compile + warmup
-    jax.block_until_ready(params)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        params, opt, _ = step(params, opt, batch)
-    jax.block_until_ready(params)
-    return (time.perf_counter() - t0) / iters
+def _measure(specs, iters: int, states=None) -> float:
+    """Mean seconds per fused step over ``iters`` post-warmup calls.
+    Programs are AOT-compiled by the executor, so neither compile time
+    nor the extra warmup step pollutes the mean."""
+    ex = ScheduleExecutor(donate=True)
+    names = []
+    for i, spec in enumerate(specs):
+        name = f"j{i}"
+        names.append(name)
+        ex.submit(name, spec, iters + 1)
+        ex.start(name, state=None if states is None else states[i])
+    ex.step_group(names)                       # compile + warmup
+    return sum(ex.step_group(names)["walltime"]
+               for _ in range(iters)) / iters
+
+
+def measure_solo(spec: JobSpec, iters: int = 3, *,
+                 state: Optional[tuple] = None) -> float:
+    """Mean seconds per solo training step (donated fused-of-one
+    program). ``state`` accepts prebuilt (params, opt, batch) — the
+    buffers are consumed (donation), so callers pass copies of a
+    pristine master state; when omitted the model is initialized here."""
+    return _measure([spec], iters, None if state is None else [state])
 
 
 def measure_pair(spec_a: JobSpec, spec_b: JobSpec, iters: int = 3, *,
                  t_a_solo: Optional[float] = None,
-                 t_b_solo: Optional[float] = None) -> Dict[str, float]:
+                 t_b_solo: Optional[float] = None,
+                 state_a: Optional[tuple] = None,
+                 state_b: Optional[tuple] = None) -> Dict[str, float]:
     """Times the interleaved pair program and returns per-step solo/pair
     walltimes and the structural interference ratios xi_A, xi_B.
 
     ``t_a_solo`` / ``t_b_solo`` accept precomputed solo timings (see
-    ``calibrate_interference``'s O(n) solo pass); when omitted they are
-    measured here."""
+    ``calibrate_interference``'s O(n) solo pass); ``state_a``/``state_b``
+    accept prebuilt states (consumed — donation) so the calibration
+    pipeline initializes each model once, not once per pair."""
     t_a = measure_solo(spec_a, iters) if t_a_solo is None else t_a_solo
     t_b = measure_solo(spec_b, iters) if t_b_solo is None else t_b_solo
-    pa, oa, ba = _make_state(spec_a)
-    pb, ob, bb = _make_state(spec_b)
-    pair = make_pair_step(spec_a, spec_b, donate=True)
-    pa, oa, _, pb, ob, _ = pair(pa, oa, ba, pb, ob, bb)   # compile + warmup
-    jax.block_until_ready((pa, pb))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        pa, oa, _, pb, ob, _ = pair(pa, oa, ba, pb, ob, bb)
-    jax.block_until_ready((pa, pb))
-    t_pair = (time.perf_counter() - t0) / iters
+    t_pair = _measure([spec_a, spec_b], iters,
+                      None if state_a is None and state_b is None
+                      else [state_a, state_b])
     return {
         "t_a_solo": t_a,
         "t_b_solo": t_b,
@@ -116,17 +93,24 @@ def measure_pair(spec_a: JobSpec, spec_b: JobSpec, iters: int = 3, *,
     }
 
 
+def measure_group(specs, iters: int = 3, states=None) -> float:
+    """Mean seconds per N-way fused group step — the >2-tenant analogue
+    of ``measure_pair`` for timing experiments on larger sharing groups
+    (the closed-loop pipeline itself only needs solo + pair timings)."""
+    return _measure(list(specs), iters, states)
+
+
 def structural_xi(t_me: float, t_other: float, *, overlap: float = 0.0,
                   mem_frac: float = 0.0, hbm_pressure: float = 0.15
                   ) -> float:
     """Analytic structural model (no execution): strict time multiplexing
-    gives xi_me = (t_me + t_other) / t_me; ``overlap`` in [0,1) credits
-    pipelined overlap between the two programs' compute and collectives;
-    an HBM-pressure term penalizes near-capacity working sets."""
-    xi = (t_me + (1.0 - overlap) * t_other) / t_me
-    if mem_frac > 0.8:
-        xi += hbm_pressure * (mem_frac - 0.8) / 0.2
-    return xi
+    gives xi_me = 1 + t_other/t_me; ``overlap`` in [0,1) credits
+    pipelined overlap between the two programs. The single shared
+    implementation (with the scheduler's ratio clamp parameterized away)
+    is :func:`repro.core.interference.structural_xi`."""
+    return _structural_xi(t_me, t_other, contention=1.0 - overlap,
+                          ratio_cap=None, mem_frac=mem_frac,
+                          hbm_pressure=hbm_pressure)
 
 
 def calibrate_interference(specs: Dict[str, JobSpec], iters: int = 2,
@@ -135,9 +119,10 @@ def calibrate_interference(specs: Dict[str, JobSpec], iters: int = 2,
     this host (the 'physical' calibration pass of Section VI-A).
 
     Solo timings are measured ONCE per spec in an O(n) pass and reused
-    for every pair — each solo measurement compiles and trains a real
-    model, so re-running it for both members of all O(n²) pairs dominated
-    calibration walltime."""
+    for every pair. The full pipeline — alpha/beta fits, memory
+    estimates, the versioned artifact — is
+    :func:`repro.core.calibration.run_calibration`; this wrapper keeps
+    the historical measure-and-fill API."""
     model = InterferenceModel()
     names = sorted(specs)
     solo = {name: measure_solo(specs[name], iters) for name in names}

@@ -94,6 +94,9 @@ class EngineBase:
         self.interference = sim.interference
         self.restart_penalty = sim.restart_penalty
         self.max_events = sim.max_events
+        # DESIGN.md §13: restore co-tenants' sub-batches when a sharer
+        # departs (opt-in; default keeps the seed semantics bit-exact)
+        self.reconfig_on_release = getattr(sim, "reconfig_on_release", False)
 
         self.time = 0.0
         self.pending: List[Job] = []
@@ -136,6 +139,12 @@ class EngineBase:
         self._drop_pending(job)
         self._on_start(job)
         self.log.append((self.time, "start", job.jid, sorted(gset)))
+        # the chosen (sub-batch, accumulation) configuration rides in a
+        # separate entry so the 4-tuple "start" shape stays stable for
+        # existing log consumers; replay (launch.cluster.plan_from_sim)
+        # reads it to configure the physical job
+        self.log.append((self.time, "config", job.jid,
+                         int(job.sub_batch), int(job.accum_steps)))
 
     def preempt_job(self, job: Job) -> None:
         if job.state != JobState.RUNNING:
@@ -153,6 +162,50 @@ class EngineBase:
         self._on_requeued(job)
         self.log.append((self.time, "preempt", job.jid))
 
+    def reconfigure_job(self, job: Job, sub_batch: int) -> None:
+        """Mid-run (τ, sub-batch) reconfiguration (DESIGN.md §13): the
+        running job switches to ``sub_batch`` with ``s = ceil(B / b)``
+        accumulation sub-steps — the effective batch is unchanged, only
+        the iteration time (and hence the rate) moves. Progress is
+        settled at the old rate first; the new rate takes effect from
+        the current event time."""
+        if job.state != JobState.RUNNING:
+            raise RuntimeError(f"job {job.jid} not running")
+        self._accrue(job, self.time)
+        job.sub_batch = int(sub_batch)
+        job.accum_steps = max(1, math.ceil(job.batch / job.sub_batch))
+        self._on_reconfig(job)
+        self.log.append((self.time, "reconfig", job.jid,
+                         int(job.sub_batch), int(job.accum_steps)))
+
+    def _restore_tenants(self, gpus) -> None:
+        """When a job departs, surviving co-tenants on its GPUs may fit a
+        larger sub-batch again (fewer accumulation sub-steps — strictly
+        faster, same effective batch). Gated by ``reconfig_on_release``."""
+        from .batch_scaling import candidate_sub_batches
+        cap = self.cluster.gpu_capacity_bytes
+        seen = set()
+        for g in gpus:
+            for jid in self.cluster.occupancy[g]:
+                if jid in seen:
+                    continue
+                seen.add(jid)
+                tenant = self.jobs[jid]
+                # binding constraint: the most-loaded of the tenant's
+                # GPUs, each loaded by the SUM of its co-tenants (> 2
+                # tenants per GPU is reachable via custom schedulers)
+                other_mem = 0.0
+                for gg in tenant.placement:
+                    load = sum(
+                        self.jobs[o].perf.mem_bytes(self.jobs[o].sub_batch)
+                        for o in self.cluster.occupancy[gg] if o != jid)
+                    other_mem = max(other_mem, load)
+                for b in candidate_sub_batches(tenant.batch):
+                    if tenant.perf.fits(b, cap, other_mem=other_mem):
+                        if b != tenant.sub_batch:
+                            self.reconfigure_job(tenant, b)
+                        break
+
     # Engine-specific bookkeeping hooks -------------------------------- #
     def _drop_pending(self, job: Job) -> None:
         if job in self.pending:
@@ -166,6 +219,10 @@ class EngineBase:
 
     def _on_requeued(self, job: Job) -> None:
         pass
+
+    def _on_reconfig(self, job: Job) -> None:
+        """Called after a running job's sub-batch changed (its own and
+        its co-runners' rates need a refresh)."""
 
     # ------------------------------------------------------------------ #
     # Progress accounting
@@ -288,12 +345,15 @@ class ScanEngine(EngineBase):
                     job.iters_done = job.iters
                     job.state = JobState.FINISHED
                     job.finish_time = self.time
-                    self.cluster.release(job.jid, job.placement)
+                    released = job.placement
+                    self.cluster.release(job.jid, released)
                     job.placement = frozenset()
                     del self.running[job.jid]
                     self._blocked_until.pop(job.jid, None)
                     finished += 1
                     self.log.append((self.time, "finish", job.jid))
+                    if self.reconfig_on_release:
+                        self._restore_tenants(released)
 
             # -- arrivals ----------------------------------------------
             while (self._arrival_idx < len(self.arrivals)
@@ -377,6 +437,10 @@ class HeapEngine(EngineBase):
     def _on_requeued(self, job: Job) -> None:
         self._entry_seq.pop(job.jid, None)
         self._pending_since[job.jid] = self.time
+
+    def _on_reconfig(self, job: Job) -> None:
+        self._dirty.add(job.jid)
+        self._dirty.update(self.cluster.co_runners(job))
 
     # ------------------------------------------------------------------ #
     def _refresh_dirty(self) -> None:
@@ -480,12 +544,15 @@ class HeapEngine(EngineBase):
                 for g in job.placement:
                     dirty.update(cluster.occupancy[g])
                 dirty.discard(jid)
-                cluster.release(jid, job.placement)
+                released = job.placement
+                cluster.release(jid, released)
                 job.placement = frozenset()
                 del running[jid]
                 self._blocked_until.pop(jid, None)
                 finished += 1
                 self.log.append((now, "finish", jid))
+                if self.reconfig_on_release:
+                    self._restore_tenants(released)
 
             # -- arrivals ----------------------------------------------
             idx = self._arrival_idx

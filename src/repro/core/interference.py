@@ -15,10 +15,42 @@ range up to ~6x. Without GPUs we provide:
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple, Union
 
 Key = Tuple[str, str]
+
+
+def structural_xi(
+    t_me: float,
+    t_other: float,
+    *,
+    contention: float = 1.0,
+    ratio_cap: Optional[float] = None,
+    mem_frac: float = 0.0,
+    hbm_pressure: float = 0.15,
+) -> float:
+    """THE structural interference model (DESIGN.md §4) — the single
+    implementation behind both the scheduler's :meth:`InterferenceModel.xi`
+    fallback and the physical testbed's analytic prediction
+    (``repro.core.coschedule.structural_xi``).
+
+    Strict time multiplexing of two programs gives
+    ``xi_me = 1 + t_other / t_me``; ``contention`` in [0, 1] scales the
+    co-tenant term (1 = no overlap between the programs, < 1 credits
+    pipelined compute/collective overlap), ``ratio_cap`` optionally clamps
+    the timing ratio (the scheduler's table-free fallback caps it at 4 so
+    one pathological pairing cannot dominate a whole schedule), and an
+    HBM-pressure term penalizes near-capacity combined working sets.
+    """
+    ratio = t_other / max(t_me, 1e-12)
+    if ratio_cap is not None and ratio > ratio_cap:
+        ratio = ratio_cap
+    xi = 1.0 + contention * ratio
+    if mem_frac > 0.8:
+        xi += hbm_pressure * (mem_frac - 0.8) / 0.2
+    return xi
 
 
 @dataclass
@@ -72,11 +104,39 @@ class InterferenceModel:
         hit = self.table.get((me, other))
         if hit is not None:
             return hit[0]
-        ratio = t_other / max(t_me, 1e-12)
-        xi = 1.0 + self.contention * min(ratio, 4.0)
-        if mem_frac > 0.8:
-            xi += self.hbm_pressure * (mem_frac - 0.8) / 0.2
-        return xi
+        return structural_xi(t_me, t_other, contention=self.contention,
+                             ratio_cap=4.0, mem_frac=mem_frac,
+                             hbm_pressure=self.hbm_pressure)
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_artifact(cls, artifact: Union[str, Dict],
+                      **overrides) -> "InterferenceModel":
+        """Build the pair table from a calibration artifact — the closed
+        loop of DESIGN.md §13: xi measured by really co-executing job
+        pairs on this host (``repro.core.calibration``) replaces the
+        synthesized :func:`paper_interference_model` table.
+
+        ``artifact`` is either the payload dict or a path to the
+        versioned ``calibration.json``; its schema is owned by
+        :mod:`repro.core.calibration`."""
+        from .calibration import CALIBRATION_VERSION, load_artifact
+        if isinstance(artifact, str):
+            if not os.path.exists(artifact):
+                raise FileNotFoundError(
+                    f"calibration artifact not found: {artifact!r} "
+                    "(run `python -m benchmarks.xi_calibration` to "
+                    "produce one)")
+            artifact = load_artifact(artifact)
+        version = artifact.get("version")
+        if version != CALIBRATION_VERSION:
+            raise ValueError(
+                f"unsupported calibration artifact version {version!r}")
+        model = cls(**overrides)
+        for entry in artifact["pairs"].values():
+            model.set_pair(entry["a"], entry["b"],
+                           float(entry["xi_a"]), float(entry["xi_b"]))
+        return model
 
 
 # Paper-like pair table for the six Pollux/paper DL tasks. The paper does

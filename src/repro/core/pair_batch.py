@@ -233,7 +233,10 @@ def _theorem1(t_run, rem_run, xi_run, t_new, iters_new, xi_new):
 
 
 def _structural_xi(interference, t_me, t_other, mem_frac):
-    """Vectorized ``InterferenceModel.xi`` structural fallback."""
+    """Vectorized mirror of :func:`repro.core.interference.structural_xi`
+    at the scheduler's parameterization (contention coefficient, ratio
+    capped at 4) — kept as array ops so the donor grid stays NumPy;
+    the scalar function is the semantic source of truth."""
     ratio = t_other / np.maximum(t_me, 1e-12)
     xi = 1.0 + interference.contention * np.minimum(ratio, 4.0)
     return np.where(mem_frac > 0.8,

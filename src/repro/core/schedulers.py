@@ -15,7 +15,9 @@ from __future__ import annotations
 from bisect import insort
 from typing import Dict, List, Optional, Tuple
 
-from .batch_scaling import best_sharing_config, candidate_sub_batches
+from .batch_scaling import (best_sharing_config,
+                            best_sharing_config_donor_scaled,
+                            candidate_sub_batches)
 from .job import ClusterState, Job, JobState
 from .perf_model import t_iter_at_workers
 from .simulator import HAS_BATCHED_DECISIONS, SchedulerBase, Simulator
@@ -452,12 +454,22 @@ class SJF_BSBF(SchedulerBase):
 
     The path comes from the constructor, else the Simulator's
     ``decision_path`` (``REPRO_SIM_DECISION`` env, default batched).
+
+    ``donor_reconfig=True`` enables the Algorithm-2 extension of
+    DESIGN.md §13: when no donor admits the new job at its current
+    footprint, the donor's own sub-batch is swept down too
+    (:func:`repro.core.batch_scaling.best_sharing_config_donor_scaled`)
+    and, when the benefit survives the donor's slowdown, the donor is
+    reconfigured mid-run via ``Simulator.reconfigure_job`` at the
+    sharing time point. Forces the scalar decision path; default off —
+    the paper's Algorithm 1 never retunes a running job.
     """
 
     name = "sjf-bsbf"
     progress_scope = "donors"   # schedule() only reads donors' progress
 
-    def __init__(self, decision: Optional[str] = None) -> None:
+    def __init__(self, decision: Optional[str] = None,
+                 donor_reconfig: bool = False) -> None:
         self._order = _StaticOrder(lambda j: j.expected_remaining_time)
         if decision not in (None, "batched", "scalar"):
             raise ValueError(
@@ -466,6 +478,11 @@ class SJF_BSBF(SchedulerBase):
         if decision == "batched" and not HAS_BATCHED_DECISIONS:
             raise ValueError(
                 "decision='batched' requires numpy (repro.core.pair_batch)")
+        self.donor_reconfig = donor_reconfig
+        if donor_reconfig and decision is None:
+            decision = "scalar"   # extension lives on the scalar path
+        if donor_reconfig and decision == "batched":
+            raise ValueError("donor_reconfig requires decision='scalar'")
         self.decision = decision
         # (cluster version, DonorBatch): donor membership / memory /
         # iteration times only change with placements, so the batch (and
@@ -558,11 +575,21 @@ class SJF_BSBF(SchedulerBase):
             # GPUs with Algorithm 2; keep those with sharing benefit.
             donor_jids = {sim.cluster.occupancy[g][0] for g in singles}
             donors = []
+            blocked = []   # donors with NO memory-feasible sub-batch
             for jid in donor_jids:
                 run = sim.jobs[jid]
                 cfg = best_sharing_config(run, job, sim.interference, cap)
                 if cfg.share:
                     donors.append((cfg, run))
+                elif cfg.decision is None:
+                    blocked.append(jid)
+            if not donors and blocked and self.donor_reconfig:
+                # only memory-blocked donors are worth the double sweep:
+                # a donor that already fit but lost Theorem 1 can only
+                # get slower by shrinking its own sub-batch
+                if self._share_with_donor_reconfig(sim, job, blocked,
+                                                   cap, free):
+                    continue
             if not donors:
                 continue  # SF False for all pairs: defer (put back in pool)
             # Line 14: sort candidate pairs by pair-JCT ascending.
@@ -586,6 +613,35 @@ class SJF_BSBF(SchedulerBase):
                 continue
             chosen = chosen[:job.gpus]
             sim.start_job(job, chosen, sub_batch=sub)
+
+    # -- donor-rescaling extension (DESIGN.md §13) ---------------------- #
+    def _share_with_donor_reconfig(self, sim: Simulator, job: Job,
+                                   donor_jids, cap: float,
+                                   free: List[int]) -> bool:
+        """No donor admits ``job`` at its current footprint: retry each
+        donor with its own sub-batch swept down, pick the best benefit,
+        place the new job on that donor's single-occupancy GPUs (plus
+        free ones) and reconfigure the donor mid-run. Single-donor only:
+        a request spanning several reconfigured donors is deferred."""
+        best = None
+        for jid in sorted(donor_jids):
+            run = sim.jobs[jid]
+            cfg = best_sharing_config_donor_scaled(run, job,
+                                                   sim.interference, cap)
+            if cfg.share and (best is None or cfg.avg_jct < best[0].avg_jct):
+                best = (cfg, run)
+        if best is None:
+            return False
+        cfg, run = best
+        chosen = [g for g in sorted(run.placement)
+                  if len(sim.cluster.occupancy[g]) == 1][:job.gpus]
+        if len(chosen) < job.gpus:
+            chosen.extend(free[: job.gpus - len(chosen)])
+        if len(chosen) < job.gpus:
+            return False
+        sim.reconfigure_job(run, cfg.donor_sub_batch)
+        sim.start_job(job, chosen[:job.gpus], sub_batch=cfg.sub_batch)
+        return True
 
 
 ALL_POLICIES = {

@@ -41,6 +41,7 @@ class Simulator:
         max_events: int = 2_000_000,
         engine: Optional[str] = None,
         decision: Optional[str] = None,
+        reconfig_on_release: bool = False,
     ) -> None:
         self.cluster = cluster
         self.jobs: Dict[int, Job] = {j.jid: j for j in jobs}
@@ -49,6 +50,11 @@ class Simulator:
         self.interference = interference or InterferenceModel()
         self.restart_penalty = restart_penalty
         self.max_events = max_events
+        # DESIGN.md §13: when a sharer departs, surviving co-tenants are
+        # restored to the largest sub-batch that fits again (a mid-run
+        # reconfiguration, logged as a "reconfig" event). Default off —
+        # the paper's Algorithm 1 never retunes a running job.
+        self.reconfig_on_release = reconfig_on_release
         self.engine_name = (engine or os.environ.get("REPRO_SIM_ENGINE")
                             or "heap")
         # sharing-decision path: "batched" (vectorized Algorithm 2 over
@@ -94,6 +100,9 @@ class Simulator:
 
     def preempt_job(self, job: Job) -> None:
         self.engine.preempt_job(job)
+
+    def reconfigure_job(self, job: Job, sub_batch: int) -> None:
+        self.engine.reconfigure_job(job, sub_batch)
 
     def effective_t_iter(self, job: Job) -> float:
         return self.engine.effective_t_iter(job)

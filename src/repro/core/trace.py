@@ -162,6 +162,48 @@ def datacenter_trace(
     return jobs
 
 
+def calibrated_trace(payload, n_jobs: int = 30, seed: int = 0,
+                     min_iters: int = 50, max_iters: int = 1000,
+                     gpu_demand: Sequence[tuple[int, float]] = (
+                         (1, 0.5), (2, 0.3), (4, 0.2)),
+                     load: float = 4.0) -> List[Job]:
+    """Workload over HOST-MEASURED profiles (DESIGN.md §13): job perf
+    comes from a calibration artifact (``repro.core.calibration``), so
+    simulated seconds are this host's seconds. Interarrival times scale
+    with the measured mean iteration time — ``load`` is roughly how many
+    solo jobs' worth of work arrives per mean job duration."""
+    from .calibration import profiles_from_artifact
+    profiles = profiles_from_artifact(payload)
+    names = sorted(profiles)
+    rng = random.Random(seed)
+    lo, hi = math.log(min_iters), math.log(max_iters)
+    mean_iters = math.exp(0.5 * (lo + hi))
+    mean_t_iter = sum(
+        p.params.t_iter(p.default_batch) for p in profiles.values()
+    ) / len(profiles)
+    mean_interarrival = mean_iters * mean_t_iter / max(load, 1e-9)
+    jobs: List[Job] = []
+    t = 0.0
+    for jid in range(n_jobs):
+        t += rng.expovariate(1.0 / mean_interarrival)
+        prof = profiles[rng.choice(names)]
+        r = rng.random()
+        acc = 0.0
+        gpus = gpu_demand[-1][0]
+        for g, p in gpu_demand:
+            acc += p
+            if r <= acc:
+                gpus = g
+                break
+        iters = int(round(math.exp(rng.uniform(lo, hi))))
+        jobs.append(Job(
+            jid=jid, model=prof.name, arrival=t, gpus=gpus,
+            iters=float(iters), batch=prof.default_batch,
+            perf=prof.perf_params(gpus),
+        ))
+    return jobs
+
+
 def simulation_trace(n_jobs: int = 240, seed: int = 0,
                      load_scale: float = 1.0,
                      tasks: Optional[Dict[str, TaskProfile]] = None,

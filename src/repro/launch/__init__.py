@@ -1,1 +1,2 @@
-"""Launchers: production mesh, multi-pod dry-run, train/serve drivers."""
+"""Launchers: production mesh, multi-pod dry-run, train/serve drivers,
+and the schedule-driven multi-job executor (`launch.cluster`)."""

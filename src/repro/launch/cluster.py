@@ -1,0 +1,503 @@
+"""Schedule-driven multi-job executor (DESIGN.md §13).
+
+The physical layer beneath the scheduling policies: where
+``repro.core.coschedule`` could only time a fixed 2-job pair, the
+:class:`ScheduleExecutor` runs an **N-way interleaved fused step
+program** per sharing group — one jitted XLA program that advances every
+member one (possibly gradient-accumulated) training step per call, the
+TPU analogue of the paper's GPU time multiplexing — and consumes a
+timeline of schedule events:
+
+* ``start``     — a job joins a group with the sub-batch Algorithm 2
+                  chose (its gradient-accumulation count follows as
+                  ``s = ceil(B / b)``);
+* ``reconfig``  — mid-run (τ, sub-batch) reconfiguration: the group
+                  program is re-fused with the new accumulation
+                  sub-batch while the job's params/optimizer state carry
+                  through bit-exactly (the effective batch — and hence
+                  convergence — is unchanged; the ragged final
+                  micro-batch is masked, see ``repro.train.grad_accum``);
+* ``finish``    — the member leaves; the surviving group re-fuses.
+
+Fused programs are AOT-compiled (``jit(...).lower(...).compile()``) and
+cached by group composition — (arch config, accumulation count, batch,
+seq) per member — so compile time never pollutes the measured walltimes
+and a recurring composition costs one compile per executor.
+
+:func:`plan_from_sim` closes the loop with the simulator: it replays a
+``Simulator`` event log into a :class:`SchedulePlan` — phases between
+schedule events, each with per-job step quotas derived from the
+simulated rates and the sharing groups as connected components of GPU
+co-tenancy — which :meth:`ScheduleExecutor.execute` runs on this host,
+reporting measured per-job execution seconds next to the simulator's
+prediction (the Table-2-style validation of
+``benchmarks/replay_validation.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.data import make_batch
+from repro.models import init_params
+from repro.train import TrainConfig, adamw_init, make_train_step
+
+
+# ---------------------------------------------------------------------- #
+# Job specification and state
+# ---------------------------------------------------------------------- #
+@dataclass
+class JobSpec:
+    """One physical training job: architecture, per-step user batch, and
+    the gradient-accumulation split (re-exported as
+    ``repro.core.coschedule.JobSpec`` for the pair-shaped API)."""
+
+    cfg: ArchConfig
+    batch: int                  # per-step user batch
+    accum_steps: int = 1        # gradient-accumulation sub-steps
+    seq: int = 128
+    seed: int = 0
+
+    def train_config(self) -> TrainConfig:
+        return TrainConfig(accum_steps=self.accum_steps)
+
+
+def _make_state(spec: JobSpec):
+    params = init_params(spec.cfg, jax.random.PRNGKey(spec.seed))
+    opt = adamw_init(params)
+    batch = make_batch(spec.cfg, spec.batch, spec.seq, seed=spec.seed)
+    return params, opt, batch
+
+
+def accum_for_sub_batch(batch: int, sub_batch: int) -> int:
+    """s = ceil(B / b) — the final micro-batch absorbs the remainder
+    (masked, so the effective batch is exactly B; same rule as the
+    simulator's ``Engine.start_job``)."""
+    if sub_batch < 1:
+        raise ValueError(f"sub_batch must be >= 1, got {sub_batch}")
+    return max(1, math.ceil(batch / min(sub_batch, batch)))
+
+
+def make_group_step(specs: Sequence[JobSpec], *, donate: bool = False):
+    """One jitted program stepping EVERY job in ``specs`` (time-
+    multiplexed: member i runs its full — possibly accumulated — train
+    step, then member i+1, ...). Signature is flat:
+
+        (p0, o0, b0, p1, o1, b1, ...) -> (p0', o0', m0, p1', o1', m1, ...)
+
+    ``donate=True`` donates all members' params/opt-states (the
+    production configuration); callers must then re-bind them from the
+    outputs each call."""
+    steps = [make_train_step(s.cfg, s.train_config()) for s in specs]
+
+    def group_step(*state):
+        out: List[Any] = []
+        for i, step in enumerate(steps):
+            p, o, m = step(*state[3 * i:3 * i + 3])
+            out += [p, o, m]
+        return tuple(out)
+
+    donate_argnums = (tuple(x for i in range(len(steps))
+                            for x in (3 * i, 3 * i + 1)) if donate else ())
+    return jax.jit(group_step, donate_argnums=donate_argnums)
+
+
+@dataclass
+class JobRun:
+    """Live state of one job inside the executor."""
+
+    name: str
+    spec: JobSpec
+    total_steps: int
+    sub_batch: int = 0          # current per-step sub-batch (0 = full)
+    accum_steps: int = 1        # current accumulation count
+    params: Any = field(default=None, repr=False)
+    opt: Any = field(default=None, repr=False)
+    batch: Any = field(default=None, repr=False)
+    steps_done: int = 0
+    walltime: float = 0.0       # attributed execution seconds
+    started: bool = False
+    finished: bool = False
+    reconfigs: List[Tuple[int, int]] = field(default_factory=list)
+    last_metrics: Any = field(default=None, repr=False)
+
+    def report(self) -> Dict[str, Any]:
+        out = {
+            "steps": self.steps_done,
+            "walltime": self.walltime,
+            "sub_batch": self.sub_batch,
+            "accum_steps": self.accum_steps,
+            "reconfigs": list(self.reconfigs),
+        }
+        if self.last_metrics is not None:
+            out["loss"] = float(self.last_metrics["loss"])
+        return out
+
+
+# ---------------------------------------------------------------------- #
+# Schedule plan: events + phases
+# ---------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class PlanOp:
+    """Schedule event applied at a phase boundary."""
+
+    kind: str                       # "start" | "reconfig" | "finish"
+    job: str
+    sub_batch: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class PlanPhase:
+    """Interval between two schedule events: ``ops`` fire at entry, then
+    every sharing group advances its members' step ``quotas``
+    round-robin. Each group's walltime is attributed to *all* its
+    running members — a time-multiplexed tenant pays for its co-tenants'
+    rounds exactly as it would on a shared GPU."""
+
+    ops: Tuple[PlanOp, ...]
+    quotas: Tuple[Tuple[str, int], ...]
+    groups: Tuple[Tuple[str, ...], ...]
+    sim_duration: float = 0.0       # predicted interval length (seconds)
+
+
+@dataclass
+class SchedulePlan:
+    phases: List[PlanPhase]
+    predicted: Dict[str, Dict[str, float]]   # name -> {exec_seconds, ...}
+
+
+# ---------------------------------------------------------------------- #
+class ScheduleExecutor:
+    """Executes a schedule of N-way shared training groups on this host.
+
+    ``rules`` optionally carries a ``repro.sharding.rules.ShardingRules``
+    bundle; fused programs are then traced and run under its activation
+    partitioning context (a no-op on a single-device host)."""
+
+    def __init__(self, *, donate: bool = True, rules=None) -> None:
+        self.runs: Dict[str, JobRun] = {}
+        self.rules = rules
+        self.donate = donate
+        self._programs: Dict[tuple, Any] = {}
+        self.compiles = 0
+        self.calls = 0
+
+    # -- job lifecycle ------------------------------------------------- #
+    def submit(self, name: str, spec: JobSpec, steps: int) -> JobRun:
+        if name in self.runs:
+            raise ValueError(f"job {name!r} already submitted")
+        run = JobRun(name=name, spec=spec, total_steps=int(steps),
+                     sub_batch=spec.batch,
+                     accum_steps=spec.accum_steps)
+        self.runs[name] = run
+        return run
+
+    def start(self, name: str, *, sub_batch: Optional[int] = None,
+              state: Optional[tuple] = None) -> JobRun:
+        """Materialize the job's params/opt/batch and (optionally) apply
+        the sub-batch Algorithm 2 chose at the sharing time point.
+        ``state`` accepts prebuilt (params, opt, batch) — the calibration
+        pipeline passes copies of a pristine master state instead of
+        re-initializing the model for every measurement."""
+        run = self.runs[name]
+        if run.started:
+            raise RuntimeError(f"job {name!r} already started")
+        if sub_batch is not None:
+            run.sub_batch = int(sub_batch)
+            run.accum_steps = accum_for_sub_batch(run.spec.batch,
+                                                  run.sub_batch)
+        run.params, run.opt, run.batch = (state if state is not None
+                                          else _make_state(run.spec))
+        run.started = True
+        return run
+
+    def reconfigure(self, name: str, sub_batch: int) -> JobRun:
+        """Mid-run (τ, sub-batch) reconfiguration: the job's next fused
+        program accumulates at the new sub-batch; params/opt state carry
+        through untouched (bit-exact) and the effective batch is
+        unchanged."""
+        run = self.runs[name]
+        if not run.started or run.finished:
+            raise RuntimeError(f"job {name!r} not running")
+        run.sub_batch = int(sub_batch)
+        run.accum_steps = accum_for_sub_batch(run.spec.batch, run.sub_batch)
+        run.reconfigs.append((run.steps_done, run.sub_batch))
+        return run
+
+    def finish(self, name: str) -> JobRun:
+        run = self.runs[name]
+        if run.steps_done != run.total_steps:
+            raise RuntimeError(
+                f"job {name!r} finished at {run.steps_done}/"
+                f"{run.total_steps} steps")
+        run.finished = True
+        return run
+
+    # -- fused programs ------------------------------------------------ #
+    def _ctx(self):
+        if self.rules is None:
+            import contextlib
+            return contextlib.nullcontext()
+        from repro.sharding.hooks import activation_rules
+        return activation_rules(self.rules.activation_table(),
+                                self.rules.mesh)
+
+    def _program_key(self, runs: Sequence[JobRun]) -> tuple:
+        return (self.donate,) + tuple(
+            (r.spec.cfg, r.accum_steps, r.spec.batch, r.spec.seq)
+            for r in runs)
+
+    def _program(self, runs: Sequence[JobRun]):
+        key = self._program_key(runs)
+        prog = self._programs.get(key)
+        if prog is None:
+            specs = [dataclasses.replace(r.spec, accum_steps=r.accum_steps)
+                     for r in runs]
+            fused = make_group_step(specs, donate=self.donate)
+            args = self._flat_args(runs)
+            with self._ctx():
+                prog = fused.lower(*args).compile()
+                # warm the executable on throwaway zero states so the
+                # first measured call pays no first-touch cost (the real
+                # states are untouched — a warmup on them would advance
+                # training)
+                dummy = jax.tree.map(jnp.zeros_like, args)
+                jax.block_until_ready(prog(*dummy))
+            self._programs[key] = prog
+            self.compiles += 1
+        return prog
+
+    @staticmethod
+    def _flat_args(runs: Sequence[JobRun]) -> tuple:
+        args: List[Any] = []
+        for r in runs:
+            args += [r.params, r.opt, r.batch]
+        return tuple(args)
+
+    # -- execution ----------------------------------------------------- #
+    def step_group(self, names: Sequence[str]) -> Dict[str, Any]:
+        """One fused call advancing every named job one step. Returns the
+        call's walltime (compile excluded — programs are AOT-compiled on
+        first use) and per-job losses."""
+        runs = [self.runs[n] for n in names]
+        for r in runs:
+            if not r.started or r.finished:
+                raise RuntimeError(f"job {r.name!r} not running")
+        prog = self._program(runs)
+        args = self._flat_args(runs)
+        with self._ctx():
+            t0 = time.perf_counter()
+            out = prog(*args)
+            jax.block_until_ready(out)
+            dt = time.perf_counter() - t0
+        losses = {}
+        for i, r in enumerate(runs):
+            r.params, r.opt, r.last_metrics = out[3 * i:3 * i + 3]
+            r.steps_done += 1
+            losses[r.name] = float(r.last_metrics["loss"])
+        self.calls += 1
+        return {"walltime": dt, "losses": losses}
+
+    def _apply(self, op: PlanOp) -> None:
+        if op.kind == "start":
+            self.start(op.job, sub_batch=op.sub_batch)
+        elif op.kind == "reconfig":
+            self.reconfigure(op.job, op.sub_batch)
+        elif op.kind == "finish":
+            self.finish(op.job)
+        else:
+            raise ValueError(f"unknown plan op {op.kind!r}")
+
+    def execute(self, plan: "SchedulePlan | Sequence[PlanPhase]",
+                ) -> Dict[str, Dict[str, Any]]:
+        """Run a schedule plan to completion and return the per-job
+        report: measured execution seconds (each group phase's walltime
+        attributed to every running member), steps, final sub-batch, and
+        — when the plan carries simulator predictions — the
+        predicted-vs-measured error."""
+        phases = plan.phases if isinstance(plan, SchedulePlan) else plan
+        for phase in phases:
+            for op in phase.ops:
+                self._apply(op)
+            quotas = dict(phase.quotas)
+            for group in phase.groups:
+                left = {n: quotas.get(n, 0) for n in group
+                        if quotas.get(n, 0) > 0}
+                t_group = 0.0
+                while left:
+                    members = sorted(left)
+                    t_group += self.step_group(members)["walltime"]
+                    for n in members:
+                        left[n] -= 1
+                        if left[n] == 0:
+                            del left[n]
+                for n in group:
+                    run = self.runs[n]
+                    if run.started and not run.finished:
+                        run.walltime += t_group
+        report = {name: run.report() for name, run in self.runs.items()}
+        if isinstance(plan, SchedulePlan):
+            for name, pred in plan.predicted.items():
+                rep = report.get(name)
+                if rep is None:
+                    continue
+                rep["predicted_exec"] = pred["exec_seconds"]
+                rep["measured_exec"] = rep["walltime"]
+                if pred["exec_seconds"] > 0:
+                    rep["error"] = (rep["walltime"] - pred["exec_seconds"]
+                                    ) / pred["exec_seconds"]
+        return report
+
+
+# ---------------------------------------------------------------------- #
+# Simulator-log replay: schedule -> executable plan
+# ---------------------------------------------------------------------- #
+def _components(placements: Mapping[int, frozenset]) -> List[List[int]]:
+    """Connected components of the sharing graph: jobs sharing any GPU
+    (directly or transitively) execute as one time-multiplexed group."""
+    parent: Dict[int, int] = {j: j for j in placements}
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    by_gpu: Dict[int, List[int]] = {}
+    for jid, gpus in placements.items():
+        for g in gpus:
+            by_gpu.setdefault(g, []).append(jid)
+    for tenants in by_gpu.values():
+        for other in tenants[1:]:
+            ra, rb = find(tenants[0]), find(other)
+            if ra != rb:
+                parent[rb] = ra
+    comps: Dict[int, List[int]] = {}
+    for j in placements:
+        comps.setdefault(find(j), []).append(j)
+    return [sorted(c) for c in comps.values()]
+
+
+def plan_from_sim(log: Sequence[tuple], jobs: Mapping[int, Any],
+                  interference, gpu_capacity_bytes: float,
+                  *, names: Optional[Mapping[int, str]] = None,
+                  ) -> SchedulePlan:
+    """Translate a ``Simulator`` event log into an executable
+    :class:`SchedulePlan`.
+
+    The log's ``start``/``config``/``reconfig``/``finish`` entries become
+    plan ops; between events, each running job's simulated progress
+    (rate x interval, with the rate re-derived from its PerfParams
+    sub-batch timing and the max-xi-over-co-runners rule the engines
+    use) accrues fractionally and is emitted as integer step quotas by
+    cumulative rounding, so every job executes exactly ``job.iters``
+    host steps by its finish event. Sharing groups are the connected
+    components of GPU co-tenancy. ``jobs`` maps jid -> the simulated
+    ``repro.core.Job``; ``names`` optionally renames jobs for the
+    executor (default ``job<jid>``)."""
+    names = names or {}
+
+    def name_of(jid: int) -> str:
+        return names.get(jid, f"job{jid}")
+
+    placements: Dict[int, frozenset] = {}
+    sub_batch: Dict[int, int] = {}
+    cum: Dict[int, float] = {}
+    emitted: Dict[int, int] = {}
+
+    def rate(jid: int) -> float:
+        job = jobs[jid]
+        base = job.perf.t_iter_sub(job.batch, sub_batch[jid])
+        xi = 1.0
+        others = set()
+        for g in placements[jid]:
+            for other in by_gpu.get(g, ()):
+                if other != jid:
+                    others.add(other)
+        for other in others:
+            oj = jobs[other]
+            mem = (job.perf.mem_bytes(sub_batch[jid])
+                   + oj.perf.mem_bytes(sub_batch[other]))
+            xi = max(xi, interference.xi(
+                job.model, oj.model, t_me=base,
+                t_other=oj.perf.t_iter_sub(oj.batch, sub_batch[other]),
+                mem_frac=mem / gpu_capacity_bytes))
+        return 1.0 / (base * xi)
+
+    # group log entries by timestamp (the log is time-ordered)
+    times: List[float] = []
+    grouped: List[List[tuple]] = []
+    for entry in log:
+        if not times or entry[0] > times[-1] + 1e-12:
+            times.append(entry[0])
+            grouped.append([entry])
+        else:
+            grouped[-1].append(entry)
+
+    phases: List[PlanPhase] = []
+    predicted: Dict[str, Dict[str, float]] = {}
+    by_gpu: Dict[int, set] = {}
+
+    for k, (t, entries) in enumerate(zip(times, grouped)):
+        ops: List[PlanOp] = []
+        # finishes first (they free GPUs), then starts/reconfigs — the
+        # engines order completions before the scheduling pass too
+        for entry in sorted(entries, key=lambda e: e[1] != "finish"):
+            kind, jid = entry[1], entry[2]
+            if kind == "finish":
+                job = jobs[jid]
+                ops.append(PlanOp("finish", name_of(jid)))
+                predicted[name_of(jid)] = {
+                    "exec_seconds": job.finish_time - job.start_time,
+                    "jct": job.jct(),
+                }
+                for g in placements.pop(jid, ()):
+                    by_gpu[g].discard(jid)
+            elif kind == "start":
+                placements[jid] = frozenset(entry[3])
+                for g in entry[3]:
+                    by_gpu.setdefault(g, set()).add(jid)
+                cum.setdefault(jid, 0.0)
+                emitted.setdefault(jid, 0)
+            elif kind == "config":
+                sub_batch[jid] = int(entry[3])
+                ops.append(PlanOp("start", name_of(jid),
+                                  sub_batch=int(entry[3])))
+            elif kind == "reconfig":
+                sub_batch[jid] = int(entry[3])
+                ops.append(PlanOp("reconfig", name_of(jid),
+                                  sub_batch=int(entry[3])))
+            elif kind == "preempt":
+                raise ValueError(
+                    "plan_from_sim only replays non-preemptive schedules")
+        # accrue simulated progress until the next event
+        dt = (times[k + 1] - t) if k + 1 < len(times) else 0.0
+        quotas: List[Tuple[str, int]] = []
+        if placements and dt > 0:
+            rates = {jid: rate(jid) for jid in placements}
+            for jid in sorted(placements):
+                job = jobs[jid]
+                cum[jid] = min(float(job.iters), cum[jid] + rates[jid] * dt)
+                # cumulative rounding: totals land on job.iters exactly
+                # (the snap tolerance mirrors the engines' relative
+                # _FINISH_TOL so a logged finish always tops up)
+                target = int(round(cum[jid]))
+                if cum[jid] >= job.iters - 1e-6 * max(1.0, job.iters):
+                    target = int(round(job.iters))
+                q = target - emitted[jid]
+                emitted[jid] = target
+                quotas.append((name_of(jid), q))
+            groups = tuple(tuple(name_of(j) for j in comp)
+                           for comp in _components(placements))
+        else:
+            groups = ()
+        phases.append(PlanPhase(ops=tuple(ops), quotas=tuple(quotas),
+                                groups=groups, sim_duration=dt))
+    return SchedulePlan(phases=phases, predicted=predicted)

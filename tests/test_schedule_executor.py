@@ -1,0 +1,464 @@
+"""Schedule-driven executor (DESIGN.md §13): N-way fused group steps are
+bit-identical to solo training, mid-run (τ, sub-batch) reconfiguration
+carries state bit-exactly and preserves the effective batch, plan
+execution attributes group walltime to every running member, the
+simulator-log replay reproduces the schedule structure, and the
+calibration artifact round-trips into the simulator."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (ClusterState, InterferenceModel, Job, PerfParams,
+                        Simulator)
+from repro.core.calibration import (CALIBRATION_VERSION, load_artifact,
+                                    perf_params_from_artifact,
+                                    profiles_from_artifact, run_calibration,
+                                    save_artifact)
+from repro.core.schedulers import SJF_BSBF
+from repro.launch.cluster import (JobSpec, PlanOp, PlanPhase, SchedulePlan,
+                                  ScheduleExecutor, _make_state,
+                                  accum_for_sub_batch, plan_from_sim)
+from repro.train import TrainConfig, make_jit_train_step
+
+
+def _spec(name, batch=2, seq=32, **kw):
+    cfg = dataclasses.replace(get_config(name).reduced(), dtype="float32")
+    return JobSpec(cfg, batch=batch, seq=seq, **kw)
+
+
+# ====================================================================== #
+# N-way fused group program
+# ====================================================================== #
+class TestGroupStep:
+    def test_three_way_group_bit_identical_to_solo(self):
+        specs = [_spec("minicpm-2b"), _spec("minicpm-2b", seed=3),
+                 _spec("qwen2-vl-2b", accum_steps=2)]
+        ex = ScheduleExecutor(donate=True)
+        for i, s in enumerate(specs):
+            ex.submit(f"j{i}", s, 2)
+            ex.start(f"j{i}")
+        for _ in range(2):
+            r = ex.step_group(["j0", "j1", "j2"])
+            assert all(np.isfinite(v) for v in r["losses"].values())
+        for i, s in enumerate(specs):
+            solo = ScheduleExecutor(donate=True)
+            solo.submit("x", s, 2)
+            solo.start("x")
+            solo.step_group(["x"])
+            solo.step_group(["x"])
+            got = jax.tree.leaves(ex.runs[f"j{i}"].params)
+            want = jax.tree.leaves(solo.runs["x"].params)
+            for a, b in zip(got, want):
+                assert (np.asarray(a) == np.asarray(b)).all(), f"job {i}"
+            assert (ex.runs[f"j{i}"].last_metrics["loss"]
+                    == solo.runs["x"].last_metrics["loss"])
+
+    def test_program_cache_reuse(self):
+        ex = ScheduleExecutor(donate=True)
+        for i in range(2):
+            ex.submit(f"j{i}", _spec("minicpm-2b", seed=i), 4)
+            ex.start(f"j{i}")
+        for _ in range(3):
+            ex.step_group(["j0", "j1"])
+        assert ex.compiles == 1 and ex.calls == 3
+        ex.step_group(["j0"])     # new composition -> one more program
+        ex.step_group(["j0"])
+        assert ex.compiles == 2 and ex.calls == 5
+
+
+# ====================================================================== #
+# Mid-run (τ, sub-batch) reconfiguration
+# ====================================================================== #
+class TestReconfigure:
+    def test_reconfig_carries_state_bit_exactly(self):
+        """Executor run with a mid-run accumulation change equals the
+        manual composition of jitted train steps at those configs."""
+        spec = _spec("minicpm-2b", batch=4)
+        ex = ScheduleExecutor(donate=True)
+        ex.submit("j", spec, 4)
+        ex.start("j")
+        ex.step_group(["j"])
+        ex.step_group(["j"])
+        ex.reconfigure("j", 2)           # b: 4 -> 2, s: 1 -> 2, at τ
+        assert ex.runs["j"].accum_steps == 2
+        ex.step_group(["j"])
+        ex.step_group(["j"])
+
+        cfg = spec.cfg
+        p, o, b = _make_state(spec)
+        s1 = make_jit_train_step(cfg, TrainConfig(accum_steps=1))
+        s2 = make_jit_train_step(cfg, TrainConfig(accum_steps=2))
+        for _ in range(2):
+            p, o, _ = s1(p, o, b)
+        for _ in range(2):
+            p, o, _ = s2(p, o, b)
+        for a, w in zip(jax.tree.leaves(ex.runs["j"].params),
+                        jax.tree.leaves(p)):
+            assert (np.asarray(a) == np.asarray(w)).all()
+
+    def test_reconfig_preserves_effective_batch(self):
+        """Training THROUGH a reconfiguration matches an uninterrupted
+        full-batch run within the grad-accum equivalence tolerance (the
+        effective batch never changes)."""
+        spec = _spec("minicpm-2b", batch=4)
+        ex = ScheduleExecutor(donate=True)
+        ex.submit("j", spec, 3)
+        ex.start("j")
+        ex.step_group(["j"])
+        ex.reconfigure("j", 2)
+        ex.step_group(["j"])
+        ex.step_group(["j"])
+
+        full = ScheduleExecutor(donate=True)
+        full.submit("j", spec, 3)
+        full.start("j")
+        for _ in range(3):
+            full.step_group(["j"])
+        for a, w in zip(jax.tree.leaves(ex.runs["j"].params),
+                        jax.tree.leaves(full.runs["j"].params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(w),
+                                       rtol=2e-3, atol=2e-5)
+
+    def test_ragged_sub_batch_reconfig(self):
+        """A non-divisor sub-batch reconfigures onto the masked ragged
+        path (PR 3) and still matches the manual jitted composition."""
+        spec = _spec("minicpm-2b", batch=3)
+        ex = ScheduleExecutor(donate=True)
+        ex.submit("j", spec, 2)
+        ex.start("j")
+        ex.step_group(["j"])
+        ex.reconfigure("j", 2)           # s = ceil(3/2) = 2, micros (2, 1)
+        assert ex.runs["j"].accum_steps == 2
+        ex.step_group(["j"])
+
+        cfg = spec.cfg
+        p, o, b = _make_state(spec)
+        s1 = make_jit_train_step(cfg, TrainConfig(accum_steps=1))
+        s2 = make_jit_train_step(cfg, TrainConfig(accum_steps=2))
+        p, o, _ = s1(p, o, b)
+        p, o, _ = s2(p, o, b)
+        for a, w in zip(jax.tree.leaves(ex.runs["j"].params),
+                        jax.tree.leaves(p)):
+            assert (np.asarray(a) == np.asarray(w)).all()
+
+    def test_accum_for_sub_batch(self):
+        assert accum_for_sub_batch(8, 8) == 1
+        assert accum_for_sub_batch(8, 4) == 2
+        assert accum_for_sub_batch(5, 3) == 2
+        assert accum_for_sub_batch(4, 99) == 1   # clamped to the batch
+        with pytest.raises(ValueError):
+            accum_for_sub_batch(4, 0)
+
+
+# ====================================================================== #
+# Plan execution
+# ====================================================================== #
+class TestExecutePlan:
+    def test_walltime_attributed_to_idle_group_members(self):
+        """A running group member with a zero step quota still pays the
+        phase's walltime — its GPU is busy with the co-tenant."""
+        ex = ScheduleExecutor(donate=True)
+        ex.submit("a", _spec("minicpm-2b"), 2)
+        ex.submit("b", _spec("minicpm-2b", seed=1), 1)
+        phases = [
+            PlanPhase(ops=(PlanOp("start", "a"), PlanOp("start", "b")),
+                      quotas=(("a", 2), ("b", 0)),
+                      groups=(("a", "b"),)),
+            PlanPhase(ops=(PlanOp("finish", "a"),),
+                      quotas=(("b", 1),),
+                      groups=(("b",),)),
+            PlanPhase(ops=(PlanOp("finish", "b"),), quotas=(), groups=()),
+        ]
+        report = ex.execute(phases)
+        assert report["a"]["steps"] == 2 and report["b"]["steps"] == 1
+        # b idled through phase 0 (a's 2 steps) and then ran phase 1
+        assert report["b"]["walltime"] > report["a"]["walltime"] > 0
+
+    def test_finish_rejects_incomplete_job(self):
+        ex = ScheduleExecutor(donate=True)
+        ex.submit("a", _spec("minicpm-2b"), 3)
+        phases = [
+            PlanPhase(ops=(PlanOp("start", "a"),), quotas=(("a", 1),),
+                      groups=(("a",),)),
+            PlanPhase(ops=(PlanOp("finish", "a"),), quotas=(), groups=()),
+        ]
+        with pytest.raises(RuntimeError, match="finished at 1/3"):
+            ex.execute(phases)
+
+    def test_predictions_joined_into_report(self):
+        ex = ScheduleExecutor(donate=True)
+        ex.submit("a", _spec("minicpm-2b"), 1)
+        plan = SchedulePlan(
+            phases=[
+                PlanPhase(ops=(PlanOp("start", "a"),),
+                          quotas=(("a", 1),), groups=(("a",),)),
+                PlanPhase(ops=(PlanOp("finish", "a"),), quotas=(),
+                          groups=()),
+            ],
+            predicted={"a": {"exec_seconds": 1000.0, "jct": 1000.0}})
+        report = ex.execute(plan)
+        assert report["a"]["predicted_exec"] == 1000.0
+        assert report["a"]["measured_exec"] == report["a"]["walltime"]
+        assert report["a"]["error"] == pytest.approx(
+            (report["a"]["walltime"] - 1000.0) / 1000.0)
+
+
+# ====================================================================== #
+# Simulator-log replay (no jax on this path: synthetic PerfParams)
+# ====================================================================== #
+GB = 2 ** 30
+
+
+def _perf(alpha=0.01, beta=0.01):
+    return PerfParams(alpha_comp=alpha, beta_comp=beta, alpha_comm=0.0,
+                      beta_comm=0.0, msg_bytes=0.0, delta=2.0,
+                      mem_base=4.0 * GB, mem_per_sample=0.25 * GB,
+                      param_bytes=1e8, n_workers=1)
+
+
+def _scenario(iters_a=30):
+    """The replay-harness shape: donor A on both GPUs, short sharers B/C
+    (3-way group; B's admission needs the donor-rescaling extension),
+    late D queues behind the doubly-tenanted GPUs."""
+    pa, pb = _perf(), _perf(beta=0.008)
+    t_a = pa.t_iter(4)
+    jobs = [
+        Job(jid=0, model="m0", arrival=0.0, gpus=2, iters=float(iters_a),
+            batch=4, perf=pa),
+        Job(jid=1, model="m1", arrival=2 * t_a, gpus=1, iters=3.0,
+            batch=4, perf=pb),
+        Job(jid=2, model="m1", arrival=4 * t_a, gpus=1, iters=4.0,
+            batch=4, perf=pb),
+        Job(jid=3, model="m0", arrival=6 * t_a, gpus=1, iters=3.0,
+            batch=4, perf=pa),
+    ]
+    # A@2 + sharer@2 fits; A@4 + sharer@1 does not
+    cap = pa.mem_bytes(2) + pb.mem_bytes(2) + 0.25 * 0.25 * GB
+    interf = InterferenceModel()
+    for a in ("m0", "m1"):
+        for b in ("m0", "m1"):
+            interf.set_pair(a, b, 1.3, 1.3)
+    return jobs, cap, interf
+
+
+def _run_scenario(engine="heap"):
+    jobs, cap, interf = _scenario()
+    cluster = ClusterState(n_servers=1, gpus_per_server=2,
+                           gpu_capacity_bytes=cap)
+    sim = Simulator(cluster, jobs, SJF_BSBF(donor_reconfig=True),
+                    interference=interf, reconfig_on_release=True,
+                    engine=engine)
+    res = sim.run()
+    return sim, res
+
+
+class TestPlanFromSim:
+    def test_schedule_structure(self):
+        sim, res = _run_scenario()
+        log = sim.log
+        # B's admission reconfigured the donor mid-run; the restore fired
+        # when A's last sharer departed
+        reconfigs = [e for e in log if e[1] == "reconfig"]
+        assert len(reconfigs) >= 2
+        assert any(e[2] == 0 and e[3] == 2 for e in reconfigs), \
+            "donor A must shrink to sub-batch 2 at the sharing point"
+        assert any(e[2] == 0 and e[3] == 4 for e in reconfigs), \
+            "donor A must restore to its full sub-batch"
+        # every start carries a config entry
+        starts = [e for e in log if e[1] == "start"]
+        configs = [e for e in log if e[1] == "config"]
+        assert len(starts) == len(configs) == 4
+
+    def test_plan_quotas_and_groups(self):
+        sim, res = _run_scenario()
+        plan = plan_from_sim(sim.log, sim.jobs, sim.interference,
+                             sim.cluster.gpu_capacity_bytes,
+                             names={0: "A", 1: "B", 2: "C", 3: "D"})
+        totals = {}
+        for phase in plan.phases:
+            for name, q in phase.quotas:
+                assert q >= 0
+                totals[name] = totals.get(name, 0) + q
+        assert totals == {"A": 30, "B": 3, "C": 4, "D": 3}
+        assert max(len(g) for p in plan.phases for g in p.groups
+                   if p.groups) == 3, "expected a 3-way sharing group"
+        kinds = [(op.kind, op.job) for p in plan.phases for op in p.ops]
+        assert kinds.count(("finish", "A")) == 1
+        assert ("reconfig", "A") in kinds
+        assert ("start", "B") in kinds
+        # predicted execution times come from the simulated timeline
+        for name, jid in (("A", 0), ("B", 1), ("C", 2), ("D", 3)):
+            job = sim.jobs[jid]
+            assert plan.predicted[name]["exec_seconds"] == pytest.approx(
+                job.finish_time - job.start_time)
+
+    def test_engines_agree_on_reconfig_schedule(self):
+        """The scan and heap engines produce the same schedule under the
+        donor-rescaling + restore-on-release extensions."""
+        sim_h, res_h = _run_scenario("heap")
+        sim_s, res_s = _run_scenario("scan")
+        for jh, js in zip(sorted(res_h.jobs, key=lambda j: j.jid),
+                          sorted(res_s.jobs, key=lambda j: j.jid)):
+            assert jh.finish_time == pytest.approx(js.finish_time, rel=1e-6)
+            assert jh.sub_batch == js.sub_batch
+        assert ([e for e in sim_h.log if e[1] == "reconfig"]
+                == pytest.approx([e for e in sim_s.log
+                                  if e[1] == "reconfig"]))
+
+    def test_default_flags_emit_no_reconfig(self):
+        """Without the opt-in flags the schedule carries no reconfig
+        events (seed semantics)."""
+        jobs, cap, interf = _scenario()
+        cluster = ClusterState(n_servers=1, gpus_per_server=2,
+                               gpu_capacity_bytes=cap)
+        sim = Simulator(cluster, jobs, SJF_BSBF(), interference=interf)
+        sim.run()
+        assert not [e for e in sim.log if e[1] == "reconfig"]
+
+
+# ====================================================================== #
+# Calibration artifact
+# ====================================================================== #
+def _fake_payload():
+    return {
+        "version": CALIBRATION_VERSION,
+        "host": {"backend": "cpu", "device_count": 1},
+        "iters": 2,
+        "archs": {
+            "m0": {"arch": "minicpm-2b", "batch": 4, "seq": 32,
+                   "accum_steps": 1,
+                   "sweep": {"sub_batches": [4, 2, 1],
+                             "times": [0.05, 0.03, 0.02]},
+                   "alpha_comp": 0.01, "beta_comp": 0.01,
+                   "t_iter_solo": 0.05, "n_params": 1000,
+                   "param_bytes": 4000.0, "mem_base": 1e9,
+                   "mem_per_sample": 1e8},
+        },
+        "pairs": {
+            "m0+m0": {"a": "m0", "b": "m0", "t_a_solo": 0.05,
+                      "t_b_solo": 0.05, "t_pair": 0.09,
+                      "xi_a": 1.8, "xi_b": 1.8,
+                      "xi_a_structural": 2.0, "xi_b_structural": 2.0},
+        },
+    }
+
+
+class TestCalibrationArtifact:
+    def test_roundtrip_and_version_check(self, tmp_path):
+        path = str(tmp_path / "calibration.json")
+        save_artifact(_fake_payload(), path)
+        payload = load_artifact(path)
+        assert payload["archs"]["m0"]["alpha_comp"] == 0.01
+        bad = _fake_payload()
+        bad["version"] = 99
+        with pytest.raises(ValueError, match="version"):
+            save_artifact(bad, path)
+        save_artifact(_fake_payload(), path)
+        import json
+        with open(path) as f:
+            raw = json.load(f)
+        raw["version"] = 99
+        with open(path, "w") as f:
+            json.dump(raw, f)
+        with pytest.raises(ValueError, match="version"):
+            load_artifact(path)
+
+    def test_interference_from_artifact(self, tmp_path):
+        model = InterferenceModel.from_artifact(_fake_payload())
+        assert model.xi("m0", "m0") == 1.8
+        path = str(tmp_path / "calibration.json")
+        save_artifact(_fake_payload(), path)
+        assert InterferenceModel.from_artifact(path).xi("m0", "m0") == 1.8
+        with pytest.raises(FileNotFoundError):
+            InterferenceModel.from_artifact(str(tmp_path / "nope.json"))
+
+    def test_perf_params_and_profiles(self):
+        payload = _fake_payload()
+        p = perf_params_from_artifact(payload["archs"]["m0"])
+        # single host: no explicit comm term; Eq. 7 reduces to s*t_comp
+        assert p.t_comm() == 0.0
+        assert p.t_iter(4) == pytest.approx(0.01 + 0.01 * 4)
+        assert p.t_iter_sub(4, 2) == pytest.approx(2 * (0.01 + 0.01 * 2))
+        profs = profiles_from_artifact(payload)
+        assert profs["m0"].default_batch == 4
+        # measured profiles ignore the requested GPU count/hardware
+        assert profs["m0"].perf_params(8) is profs["m0"].perf_params(1)
+
+    def test_run_calibration_measures_once_per_model(self, monkeypatch):
+        """The pipeline initializes each model once and threads pristine
+        state copies into the measurements (no O(n) extra re-inits)."""
+        import repro.core.coschedule as cos
+        import repro.launch.cluster as cluster_mod
+
+        made = []
+        real_make_state = cluster_mod._make_state
+
+        def counting_make_state(spec):
+            made.append(spec.cfg.name)
+            return real_make_state(spec)
+
+        monkeypatch.setattr(cluster_mod, "_make_state", counting_make_state)
+        solo_calls, pair_calls = [], []
+        monkeypatch.setattr(
+            cos, "measure_solo",
+            lambda spec, iters=3, state=None:
+                solo_calls.append((spec.batch, state is not None)) or 0.05)
+
+        def fake_pair(a, b, iters=3, *, t_a_solo=None, t_b_solo=None,
+                      state_a=None, state_b=None):
+            pair_calls.append((t_a_solo, t_b_solo,
+                               state_a is not None, state_b is not None))
+            return {"t_a_solo": t_a_solo, "t_b_solo": t_b_solo,
+                    "t_pair": 0.09, "xi_a": 1.8, "xi_b": 1.8, "iters": iters}
+
+        monkeypatch.setattr(cos, "measure_pair", fake_pair)
+        specs = {"m": _spec("minicpm-2b", batch=4)}
+        payload = run_calibration(specs, iters=1)
+        assert made == ["minicpm-2b-reduced"], "one init per model"
+        # every measurement consumes prebuilt state (master copies; the
+        # sweep points only rebuild the data tensor at batch b), and the
+        # spec's own solo timing reuses the sweep's full-batch point
+        assert [c[0] for c in solo_calls] == [4, 2, 1]
+        assert all(prebuilt for _, prebuilt in solo_calls)
+        assert pair_calls == [(0.05, 0.05, True, True)]
+        assert payload["version"] == CALIBRATION_VERSION
+        assert payload["archs"]["m"]["alpha_comp"] == pytest.approx(0.05)
+        assert payload["pairs"]["m+m"]["xi_a"] == 1.8
+
+
+# ====================================================================== #
+# Pair-shaped facade keeps its state-reuse contract
+# ====================================================================== #
+class TestMeasureStateReuse:
+    def test_measure_solo_skips_init_with_prebuilt_state(self, monkeypatch):
+        import repro.core.coschedule as cos
+        import repro.launch.cluster as cluster_mod
+
+        spec = _spec("minicpm-2b")
+        state = _make_state(spec)
+
+        def boom(_):
+            raise AssertionError("_make_state must not run")
+
+        monkeypatch.setattr(cluster_mod, "_make_state", boom)
+        t = cos.measure_solo(spec, iters=1, state=state)
+        assert t > 0
+
+    def test_measure_pair_accepts_prebuilt_states(self, monkeypatch):
+        import repro.core.coschedule as cos
+        import repro.launch.cluster as cluster_mod
+
+        spec = _spec("minicpm-2b")
+        sa, sb = _make_state(spec), _make_state(spec)
+
+        def boom(_):
+            raise AssertionError("_make_state must not run")
+
+        monkeypatch.setattr(cluster_mod, "_make_state", boom)
+        r = cos.measure_pair(spec, spec, iters=1, t_a_solo=0.5,
+                             t_b_solo=0.5, state_a=sa, state_b=sb)
+        assert r["t_pair"] > 0 and r["xi_a"] == pytest.approx(
+            r["t_pair"] / 0.5)
