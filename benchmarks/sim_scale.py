@@ -1,0 +1,257 @@
+"""Datacenter-year scale benchmark: Philly-shaped trace replay through
+the vectorized scheduling pass (DESIGN.md §14).
+
+Three questions, one artifact (``BENCH_sim_scale.json``):
+
+1. **Does throughput hold as the cluster grows?** A {64, 256, 1024}-GPU
+   ladder replays :func:`repro.core.trace.philly_trace` (job-size /
+   duration / diurnal-arrival distributions shaped like the Philly and
+   Helios traces) through SJF and SJF-BSBF with the grid decision path.
+   Acceptance: events/sec must not decay from 64 to 1024 GPUs — the
+   pre-vectorization scheduler was O(pending x donors) *python* work per
+   pass and fell over exactly here.
+2. **How fast is a datacenter-year?** The headline scenario is 10,240
+   GPUs / 100,000 jobs (a Philly-sized cluster over months of trace
+   time); acceptance is >= 50k simulated events/sec, where an event is
+   one scheduler/engine log record (arrive, start, config, finish — the
+   granularity a replay consumer sees). Engine loop iterations/sec are
+   reported alongside.
+3. **What does +10% load do to p95 queueing?** The capacity-planning
+   probe replays the same trace at utilization 0.7 and 0.77 and reports
+   the p50/p90/p95/p99 queueing-delay shift — the question an operator
+   actually asks of a simulator at this scale.
+
+The grid pass must be a pure optimization: the smallest ladder point is
+also replayed with ``decision="scalar"`` and the schedules asserted
+identical (event log, summary, per-job finish times).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.sim_scale
+    PYTHONPATH=src python -m benchmarks.sim_scale --smoke
+    PYTHONPATH=src python -m benchmarks.sim_scale \
+        --policies sjf --no-headline --out /tmp/scale.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+from repro.core import (ClusterState, Simulator, make_scheduler,
+                        paper_interference_model)
+from repro.core.trace import philly_trace
+
+# ladder: gpus -> n_jobs (jobs scale with the cluster so each point
+# simulates a comparable span of trace time)
+LADDER_JOBS = {64: 2000, 256: 8000, 1024: 20000}
+HEADLINE = (10240, 100000)
+GPUS_PER_SERVER = 8
+GB = 2 ** 30
+EVENTS_PER_SEC_BAR = 50_000.0
+
+
+def _percentiles(values: List[float],
+                 qs=(50, 90, 95, 99)) -> Dict[str, float]:
+    """Linear-interpolated percentiles of ``values`` (0.0 when empty)."""
+    if not values:
+        return {f"p{q}": 0.0 for q in qs}
+    xs = sorted(values)
+    out: Dict[str, float] = {}
+    for q in qs:
+        pos = (len(xs) - 1) * q / 100.0
+        lo = int(pos)
+        hi = min(lo + 1, len(xs) - 1)
+        out[f"p{q}"] = xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
+    return out
+
+
+def run_once(policy: str, n_gpus: int, n_jobs: int, seed: int,
+             utilization: float, decision: Optional[str] = None,
+             keep_sim: bool = False) -> Dict:
+    jobs = philly_trace(n_jobs=n_jobs, seed=seed, n_gpus=n_gpus,
+                        utilization=utilization)
+    cluster = ClusterState(n_servers=n_gpus // GPUS_PER_SERVER,
+                           gpus_per_server=GPUS_PER_SERVER,
+                           gpu_capacity_bytes=11 * GB)
+    sim = Simulator(cluster, jobs, make_scheduler(policy),
+                    interference=paper_interference_model(),
+                    decision=decision, max_events=50_000_000)
+    t0 = time.perf_counter()
+    res = sim.run()
+    wall = time.perf_counter() - t0
+    row = {
+        "policy": policy,
+        "decision": sim.decision_path,
+        "n_gpus": n_gpus,
+        "n_jobs": n_jobs,
+        "utilization": utilization,
+        "wall_seconds": wall,
+        "log_records": len(sim.log),
+        "loop_iterations": res.events,
+        "events_per_sec": len(sim.log) / wall,
+        "iterations_per_sec": res.events / wall,
+        "avg_jct": res.avg_jct(),
+        "avg_queueing": res.avg_queueing(),
+        "makespan": res.makespan,
+        "queueing": _percentiles([j.queueing_delay() for j in res.jobs]),
+    }
+    if keep_sim:
+        row["_sim"] = sim   # stripped before serialization
+        row["_res"] = res
+    return row
+
+
+def check_identity(policy: str, n_gpus: int, n_jobs: int, seed: int,
+                   utilization: float) -> Dict:
+    """Replay the same scenario on the grid and scalar decision paths
+    and require bit-identical schedules."""
+    a = run_once(policy, n_gpus, n_jobs, seed, utilization,
+                 decision="grid", keep_sim=True)
+    b = run_once(policy, n_gpus, n_jobs, seed, utilization,
+                 decision="scalar", keep_sim=True)
+    sim_a, sim_b = a.pop("_sim"), b.pop("_sim")
+    res_a, res_b = a.pop("_res"), b.pop("_res")
+    if sim_a.log != sim_b.log:
+        raise AssertionError(
+            f"grid vs scalar event logs diverged at {n_gpus} GPUs "
+            f"({len(sim_a.log)} vs {len(sim_b.log)} records)")
+    if res_a.summary() != res_b.summary():
+        raise AssertionError(
+            f"grid vs scalar summaries diverged at {n_gpus} GPUs: "
+            f"{res_a.summary()} vs {res_b.summary()}")
+    return {"n_gpus": n_gpus, "n_jobs": n_jobs, "policy": policy,
+            "identical_log": True, "identical_summary": True,
+            "log_records": len(sim_a.log)}
+
+
+def capacity_probe(policy: str, n_gpus: int, n_jobs: int, seed: int,
+                   base_utilization: float, verbose: bool) -> Dict:
+    """+10% offered load (utilization * 1.1 compresses the arrival
+    horizon by 10%) -> queueing-percentile shift."""
+    base = run_once(policy, n_gpus, n_jobs, seed, base_utilization)
+    loaded = run_once(policy, n_gpus, n_jobs, seed,
+                      base_utilization * 1.1)
+    delta = {k: loaded["queueing"][k] - base["queueing"][k]
+             for k in base["queueing"]}
+    if verbose:
+        print(f"  capacity [{policy}] {n_gpus} GPUs: p95 queueing "
+              f"{base['queueing']['p95']:.0f}s -> "
+              f"{loaded['queueing']['p95']:.0f}s "
+              f"(+10% load => {delta['p95']:+.0f}s)")
+    return {"policy": policy, "n_gpus": n_gpus, "n_jobs": n_jobs,
+            "base_utilization": base_utilization,
+            "base": base, "plus_10pct_load": loaded,
+            "queueing_delta": delta}
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--policies", default="sjf,sjf-bsbf",
+                    help="comma-separated policy names")
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--utilization", type=float, default=0.7,
+                    help="offered load as a fraction of cluster "
+                         "GPU-seconds (Philly ran ~0.5-0.8 utilized)")
+    ap.add_argument("--no-headline", action="store_true",
+                    help="skip the 10240-GPU / 100k-job scenario")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration (64 GPUs, 300 jobs; "
+                         "no headline, no acceptance bars)")
+    ap.add_argument("--out", default=os.path.join(
+        "artifacts", "bench", "BENCH_sim_scale.json"))
+    args = ap.parse_args(argv)
+
+    policies = [p.strip() for p in args.policies.split(",") if p.strip()]
+    if args.smoke:
+        ladder = [(64, 300)]
+        headline = None
+        probe_size = (64, 300)
+    else:
+        ladder = sorted(LADDER_JOBS.items())
+        headline = None if args.no_headline else HEADLINE
+        probe_size = (1024, LADDER_JOBS[1024])
+
+    rows: List[Dict] = []
+    for policy in policies:
+        for n_gpus, n_jobs in ladder:
+            r = run_once(policy, n_gpus, n_jobs, args.seed,
+                         args.utilization)
+            rows.append(r)
+            print(f"  ladder [{policy}] {n_gpus:>6} GPUs / {n_jobs} jobs: "
+                  f"{r['wall_seconds']:7.2f}s  "
+                  f"{r['events_per_sec']:9.0f} ev/s  "
+                  f"p95 queueing {r['queueing']['p95']:.0f}s")
+
+    headline_rows: List[Dict] = []
+    if headline is not None:
+        n_gpus, n_jobs = headline
+        for policy in policies:
+            r = run_once(policy, n_gpus, n_jobs, args.seed,
+                         args.utilization)
+            headline_rows.append(r)
+            print(f"headline [{policy}] {n_gpus} GPUs / {n_jobs} jobs: "
+                  f"{r['wall_seconds']:7.2f}s  "
+                  f"{r['events_per_sec']:9.0f} ev/s  "
+                  f"({r['iterations_per_sec']:.0f} loop-iter/s)")
+
+    # grid == scalar on the smallest ladder point, sharing policy only
+    # (the grid pass is a no-op for non-sharing policies)
+    id_gpus, id_jobs = ladder[0]
+    identity = [check_identity(p, id_gpus, min(id_jobs, 2000), args.seed,
+                               args.utilization)
+                for p in policies if "bsbf" in p] or None
+    if identity:
+        print(f"identity: grid == scalar on {id_gpus} GPUs "
+              f"({identity[0]['log_records']} log records)")
+
+    probes = [capacity_probe(p, probe_size[0], probe_size[1], args.seed,
+                             args.utilization, verbose=True)
+              for p in policies]
+
+    payload = {
+        "bench": "sim_scale",
+        "smoke": bool(args.smoke),
+        "trace": "philly",
+        "seed": args.seed,
+        "utilization": args.utilization,
+        "gpus_per_server": GPUS_PER_SERVER,
+        "events_per_sec_bar": EVENTS_PER_SEC_BAR,
+        "ladder": rows,
+        "headline": headline_rows or None,
+        "identity": identity,
+        "capacity_probe": probes,
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+    if args.smoke:
+        return 0
+
+    # acceptance 1: no throughput decay across the ladder (per policy)
+    status = 0
+    for policy in policies:
+        pts = [r for r in rows if r["policy"] == policy]
+        if len(pts) >= 2 and pts[-1]["events_per_sec"] < pts[0][
+                "events_per_sec"] * 0.9:
+            print(f"WARNING: [{policy}] events/sec decays "
+                  f"{pts[0]['events_per_sec']:.0f} -> "
+                  f"{pts[-1]['events_per_sec']:.0f} across "
+                  f"{pts[0]['n_gpus']} -> {pts[-1]['n_gpus']} GPUs")
+            status = 1
+    # acceptance 2: the headline scenario clears the events/sec bar
+    if headline_rows:
+        best = max(r["events_per_sec"] for r in headline_rows)
+        if best < EVENTS_PER_SEC_BAR:
+            print(f"WARNING: headline events/sec {best:.0f} below the "
+                  f"{EVENTS_PER_SEC_BAR:.0f} bar")
+            status = 1
+    return status
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

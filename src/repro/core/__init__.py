@@ -32,7 +32,8 @@ from .sweep import (ScenarioSpec, grid, run_scenario, run_sweep,
                     rows_by_policy, summary_table, write_csv, write_json)
 from .tasks import PAPER_TASK_PROFILES, TaskProfile, profile_from_arch
 from .trace import (TraceConfig, calibrated_trace, datacenter_trace,
-                    generate_trace, physical_trace, simulation_trace)
+                    generate_trace, philly_trace, physical_trace,
+                    simulation_trace)
 
 __all__ = [
     "ALL_POLICIES", "CALIBRATION_VERSION", "ClusterState",
@@ -50,7 +51,7 @@ __all__ = [
     "fit_comp_params", "generate_trace", "grid", "infer_xi",
     "load_artifact", "make_scheduler",
     "pair_timeline", "paper_interference_model",
-    "perf_params_from_artifact", "physical_trace",
+    "perf_params_from_artifact", "philly_trace", "physical_trace",
     "profile_from_arch", "profiles_from_artifact", "ring_allreduce_bytes",
     "rows_by_policy",
     "run_calibration", "run_scenario", "run_sweep", "save_artifact",

@@ -34,8 +34,16 @@ class SharingConfig:
     xi_run: float = 1.0
 
 
+_CANDIDATES_MEMO: dict = {}
+
+
 def candidate_sub_batches(batch: int) -> list[int]:
-    """B, B/2, ..., 1 (powers-of-two steps, as in Algorithm 2)."""
+    """B, B/2, ..., 1 (powers-of-two steps, as in Algorithm 2).
+    Memoized per batch size (a trace has few distinct batches but every
+    arriving job asks); treat the result as read-only."""
+    out = _CANDIDATES_MEMO.get(batch)
+    if out is not None:
+        return out
     out = []
     b = batch
     while b >= 1:
@@ -43,6 +51,7 @@ def candidate_sub_batches(batch: int) -> list[int]:
         if b == 1:
             break
         b = math.ceil(b / 2)
+    _CANDIDATES_MEMO[batch] = out
     return out
 
 
@@ -51,12 +60,16 @@ def best_sharing_config(
     new: Job,
     interference: InterferenceModel,
     gpu_capacity_bytes: float,
+    rem_run: Optional[float] = None,
 ) -> SharingConfig:
     """Algorithm 2. ``running`` keeps its current sub-batch (the paper does
-    not re-tune the running job); only the new job's b is swept."""
+    not re-tune the running job); only the new job's b is swept.
+    ``rem_run`` overrides the donor's remaining iterations (schedulers
+    pass the engine's virtual read, ``Simulator.remaining_at``)."""
     run_mem = running.perf.mem_bytes(running.sub_batch)
     t_run = running.solo_t_iter
-    rem_run = running.remaining_iters
+    if rem_run is None:
+        rem_run = running.remaining_iters
     # xi is independent of the candidate sub-batch under a global override
     # or a two-way pair-table hit; only the structural fallback needs the
     # per-candidate timing/memory arguments.
@@ -121,6 +134,7 @@ def best_sharing_config_donor_scaled(
     new: Job,
     interference: InterferenceModel,
     gpu_capacity_bytes: float,
+    rem_run: Optional[float] = None,
 ) -> DonorScaledConfig:
     """Algorithm-2 extension (DESIGN.md §13): when no sub-batch of the
     new job fits beside the donor's *current* footprint, sweep the
@@ -136,7 +150,8 @@ def best_sharing_config_donor_scaled(
     (declining to share leaves it untouched), so the donor's slowdown is
     charged against the sharing benefit — a pair only shares when the
     benefit survives the reconfiguration cost."""
-    rem_run = running.remaining_iters
+    if rem_run is None:
+        rem_run = running.remaining_iters
     t_run_cur = running.solo_t_iter
     fixed_xi = interference.pair_fixed(running.model, new.model)
     best: Optional[DonorScaledConfig] = None

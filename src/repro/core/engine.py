@@ -41,6 +41,17 @@ _FINISH_TOL = 1e-6
 
 @dataclass
 class SimResults:
+    """Per-run results container.
+
+    Contract on degenerate inputs (pinned by
+    ``tests/test_sim_results_contract.py``): ``avg_jct`` /
+    ``avg_queueing`` return **0.0 when the selection is empty** — an
+    empty job list, or a large/small split with no members (e.g. a trace
+    with only small jobs asked for ``large=True``). Callers averaging
+    averages must treat 0.0-with-empty-selection as "no data", not as a
+    measured zero. ``makespan`` is 0.0 for an empty run.
+    """
+
     jobs: List[Job]
     makespan: float
     events: int
@@ -101,6 +112,10 @@ class EngineBase:
         self.time = 0.0
         self.pending: List[Job] = []
         self.running: Dict[int, Job] = {}
+        # monotone preemption counter: the vectorized pending table
+        # (repro.core.pass_batch) rebuilds when it moves, because a
+        # requeued job re-enters the queue with a changed sort key
+        self.preemptions_total = 0
         self._arrival_idx = 0
         self._blocked_until: Dict[int, float] = {}
         self._next_tick = (self.scheduler.tick_interval
@@ -136,6 +151,9 @@ class EngineBase:
         penalty = self.restart_penalty if job.preemptions > 0 else 0.0
         self._blocked_until[job.jid] = self.time + penalty
         self.running[job.jid] = job
+        fl = self.cluster._flat
+        if fl is not None:
+            fl.note_start(job, self._blocked_until[job.jid])
         self._drop_pending(job)
         self._on_start(job)
         self.log.append((self.time, "start", job.jid, sorted(gset)))
@@ -156,6 +174,10 @@ class EngineBase:
         job.state = JobState.PENDING
         job.preemptions += 1
         job.current_rate = 0.0
+        self.preemptions_total += 1
+        fl = self.cluster._flat
+        if fl is not None:
+            fl.note_rate(job)
         del self.running[job.jid]
         self._blocked_until.pop(job.jid, None)
         self.pending.append(job)
@@ -174,6 +196,9 @@ class EngineBase:
         self._accrue(job, self.time)
         job.sub_batch = int(sub_batch)
         job.accum_steps = max(1, math.ceil(job.batch / job.sub_batch))
+        fl = self.cluster._flat
+        if fl is not None:
+            fl.note_reconfig(job)
         self._on_reconfig(job)
         self.log.append((self.time, "reconfig", job.jid,
                          int(job.sub_batch), int(job.accum_steps)))
@@ -229,6 +254,12 @@ class EngineBase:
     # ------------------------------------------------------------------ #
     def effective_t_iter(self, job: Job) -> float:
         base = job.base_t_iter()
+        occupancy = self.cluster.occupancy
+        for g in job.placement:
+            if len(occupancy[g]) > 1:
+                break
+        else:
+            return base   # exclusive tenancy: no co-runner, xi = 1
         xi = 1.0
         for other_id in self.cluster.co_runners(job):
             other = self.jobs[other_id]
@@ -254,6 +285,9 @@ class EngineBase:
             if stalled > 0:
                 job.waiting_time += stalled
         job.last_progress_at = now
+        fl = self.cluster._flat
+        if fl is not None:
+            fl.note_progress(job)
 
     def _predicted_finish(self, job: Job) -> float:
         if job.current_rate <= 0:
@@ -261,8 +295,31 @@ class EngineBase:
         begin = max(self.time, self._blocked_until.get(job.jid, 0.0))
         return begin + job.remaining_iters / job.current_rate
 
+    def remaining_at(self, job: Job) -> float:
+        """``job``'s remaining iterations at the current event time,
+        *without* materializing the accrual — the same float the next
+        ``_accrue(job, self.time)`` would leave behind (identical
+        IEEE-754 operation order). All sharing-decision paths read
+        donors through this (or its vectorized mirror,
+        ``pass_batch.FlatJobs.donor_rem``), so scalar, batched, and
+        grid decisions see bit-identical donor state with no
+        O(donors) pre-pass accrual sweep."""
+        b = self._blocked_until.get(job.jid, 0.0)
+        lp = job.last_progress_at
+        begin = lp if lp > b else b
+        done = job.iters_done
+        now = self.time
+        rate = job.current_rate
+        if now > begin and rate > 0.0:
+            adv = done + (now - begin) * rate
+            iters = job.iters
+            done = adv if adv < iters else iters
+        rem = job.iters - done
+        return rem if rem > 0.0 else 0.0
+
     def _results(self) -> SimResults:
-        makespan = max(j.finish_time for j in self.jobs.values())
+        makespan = max((j.finish_time for j in self.jobs.values()),
+                       default=0.0)
         return SimResults(jobs=list(self.jobs.values()), makespan=makespan,
                           events=self._events, name=self.scheduler.name)
 
@@ -300,8 +357,11 @@ class ScanEngine(EngineBase):
         return base * xi
 
     def _refresh_rates(self) -> None:
+        fl = self.cluster._flat
         for job in self.running.values():
             job.current_rate = 1.0 / self.effective_t_iter(job)
+            if fl is not None:
+                fl.note_rate(job)
 
     def run(self) -> SimResults:
         finished = 0
@@ -445,7 +505,12 @@ class HeapEngine(EngineBase):
     # ------------------------------------------------------------------ #
     def _refresh_dirty(self) -> None:
         """Recompute rates and (re)index finish events for jobs whose
-        co-runner sets changed since the last event."""
+        co-runner sets changed since the last event. Updates are staged
+        and applied in one batch: when the batch rivals the heap size
+        (mass preemption, big placement waves), both heaps are rebuilt
+        with a single ``heapify`` over the still-valid entries instead
+        of O(batch x log heap) pushes — pop order only depends on the
+        entry keys, so results are unchanged."""
         dirty = self._dirty
         if not dirty:
             return
@@ -453,6 +518,9 @@ class HeapEngine(EngineBase):
         blocked = self._blocked_until
         entry_seq = self._entry_seq
         now = self.time
+        fl = self.cluster._flat
+        pushes: List[tuple] = []
+        done_pushes: List[tuple] = []
         for jid in dirty:
             job = running.get(jid)
             if job is None:
@@ -460,6 +528,8 @@ class HeapEngine(EngineBase):
             self._accrue(job, now)
             rate = 1.0 / self.effective_t_iter(job)
             job.current_rate = rate
+            if fl is not None:
+                fl.note_rate(job)
             b = blocked.get(jid, 0.0)
             begin = now if now > b else b
             rem = job.iters - job.iters_done
@@ -468,10 +538,27 @@ class HeapEngine(EngineBase):
             tol = _FINISH_TOL * (job.iters if job.iters > 1.0 else 1.0)
             self._seq = seq = self._seq + 1
             entry_seq[jid] = seq
-            heapq.heappush(self._heap, (begin + rem / rate, seq, jid))
-            heapq.heappush(self._done_heap,
-                           (begin + (rem - tol) / rate, seq, jid))
+            pushes.append((begin + rem / rate, seq, jid))
+            done_pushes.append((begin + (rem - tol) / rate, seq, jid))
         dirty.clear()
+        heap = self._heap
+        if len(pushes) > 64 and 4 * len(pushes) >= len(heap):
+            live = [e for e in heap if entry_seq.get(e[2]) == e[1]]
+            live.extend(pushes)
+            heapq.heapify(live)
+            self._heap = live
+            done = [e for e in self._done_heap
+                    if entry_seq.get(e[2]) == e[1]]
+            done.extend(done_pushes)
+            heapq.heapify(done)
+            self._done_heap = done
+        else:
+            heappush = heapq.heappush
+            for e in pushes:
+                heappush(heap, e)
+            done = self._done_heap
+            for e in done_pushes:
+                heappush(done, e)
 
     # ------------------------------------------------------------------ #
     def run(self) -> SimResults:

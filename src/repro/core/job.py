@@ -8,6 +8,11 @@ from typing import Dict, FrozenSet, List, Optional, Set, Tuple
 
 from .perf_model import PerfParams, t_iter_at_workers
 
+try:   # the flat-array fast paths want numpy; plain-python fallbacks stay
+    import numpy as _np
+except ModuleNotFoundError:   # pragma: no cover - numpy-less env
+    _np = None
+
 
 class JobState(enum.Enum):
     PENDING = "pending"
@@ -169,16 +174,28 @@ class ClusterState:
         default_factory=dict, repr=False, compare=False)   # gpu -> sole jid
     _donor_count: Dict[int, int] = field(
         default_factory=dict, repr=False, compare=False)   # jid -> #single GPUs
+    # per-server free-GPU counts as a flat preallocated array (python list
+    # fallback without numpy): consolidated_pick_free reads it instead of
+    # re-deriving bucket sizes, and the vectorized scheduling pass
+    # (repro.core.pass_batch) reads the attached FlatJobs mirror below
+    _free_count: object = field(default=None, repr=False, compare=False)
+    # optional repro.core.pass_batch.FlatJobs attachment: when present,
+    # donor-membership transitions are pushed into its flat donor index
+    _flat: object = field(default=None, repr=False, compare=False)
 
     def __post_init__(self) -> None:
         for g in range(self.n_gpus):
             self.occupancy.setdefault(g, [])
         self._free_by_server = [set() for _ in range(self.n_servers)]
+        self._free_count = (_np.zeros(self.n_servers, dtype=_np.int64)
+                            if _np is not None else [0] * self.n_servers)
         for g in range(self.n_gpus):
             occ = self.occupancy[g]
             if not occ:
                 self._free.add(g)
-                self._free_by_server[self.server_of(g)].add(g)
+                sid = self.server_of(g)
+                self._free_by_server[sid].add(g)
+                self._free_count[sid] += 1
             elif len(occ) == 1:
                 self._mark_single(g, occ[0])
 
@@ -208,7 +225,9 @@ class ClusterState:
     def _mark_single(self, gpu: int, jid: int) -> None:
         self._single.add(gpu)
         self._single_owner[gpu] = jid
-        self._donor_count[jid] = self._donor_count.get(jid, 0) + 1
+        self._donor_count[jid] = count = self._donor_count.get(jid, 0) + 1
+        if self._flat is not None:
+            self._flat.set_donor_singles(jid, count)
 
     def _unmark_single(self, gpu: int) -> None:
         self._single.discard(gpu)
@@ -218,6 +237,8 @@ class ClusterState:
             self._donor_count[jid] = left
         else:
             del self._donor_count[jid]
+        if self._flat is not None:
+            self._flat.set_donor_singles(jid, left)
 
     # ------------------------------------------------------------------ #
     def free_gpus(self) -> List[int]:
@@ -267,41 +288,124 @@ class ClusterState:
 
     def consolidated_pick_free(self, k: int) -> List[int]:
         """``consolidated_pick(free_gpus(), k)`` off the per-server free
-        index: O(servers log servers + k log k) instead of re-bucketing
-        every free GPU on each call."""
+        index. With numpy the common case — the request fits on the
+        single most-free server — is one ``argmax`` over the flat
+        free-count array; the multi-server spill sorts server ids by
+        ``(-count, sid)`` with one C-level ``lexsort``. Both reproduce
+        the original bucket order exactly."""
+        fbs = self._free_by_server
+        cnt = self._free_count
+        if _np is not None:
+            # first max == smallest server id among ties, the bucket head
+            m = int(cnt.argmax())
+            if cnt[m] >= k > 0:
+                if k == 1:
+                    return [min(fbs[m])]
+                return sorted(fbs[m])[:k]
+            order = _np.lexsort((_np.arange(self.n_servers), -cnt))
+            buckets = ((int(sid), fbs[sid]) for sid in order if cnt[sid])
+            return self._pick_from_buckets(buckets, k)
         order = sorted(
-            ((sid, gpus) for sid, gpus in enumerate(self._free_by_server)
-             if gpus),
+            ((sid, gpus) for sid, gpus in enumerate(fbs) if gpus),
             key=lambda kv: (-len(kv[1]), kv[0]))
         return self._pick_from_buckets(order, k)
 
+    def smallest_free(self, k: int) -> List[int]:
+        """The ``k`` smallest free GPU ids — ``free_gpus()[:k]`` without
+        materializing (and sorting) the whole free list; the sharing
+        placement only ever needs a few fill GPUs."""
+        free = self._free
+        if k <= 0:
+            return []
+        if k >= len(free):
+            return sorted(free)
+        if _np is not None and len(free) > 64:
+            arr = _np.fromiter(free, dtype=_np.int64, count=len(free))
+            head = _np.partition(arr, k - 1)[:k]
+            head.sort()
+            return head.tolist()
+        return sorted(free)[:k]
+
     def allocate(self, jid: int, gpus: FrozenSet[int]) -> None:
+        # the single-occupancy transitions inline _mark_single /
+        # _unmark_single: allocate/release run once per placement at
+        # datacenter scale and the call overhead dominates
+        occupancy = self.occupancy
+        free = self._free
+        fbs = self._free_by_server
+        fc = self._free_count
+        gps = self.gpus_per_server
+        max_jobs = self.max_jobs_per_gpu
+        single = self._single
+        owner = self._single_owner
+        dcount = self._donor_count
+        flat = self._flat
         for g in gpus:
-            occ = self.occupancy[g]
-            if len(occ) >= self.max_jobs_per_gpu:
+            occ = occupancy[g]
+            n = len(occ)
+            if n >= max_jobs:
                 raise RuntimeError(f"GPU {g} already holds {occ}")
             occ.append(jid)
-            if len(occ) == 1:
-                self._free.discard(g)
-                self._free_by_server[self.server_of(g)].discard(g)
-                self._mark_single(g, jid)
-            elif len(occ) == 2:
-                self._unmark_single(g)
+            if n == 0:
+                free.discard(g)
+                sid = g // gps
+                fbs[sid].discard(g)
+                fc[sid] -= 1
+                single.add(g)
+                owner[g] = jid
+                dcount[jid] = count = dcount.get(jid, 0) + 1
+                if flat is not None:
+                    flat.set_donor_singles(jid, count)
+            elif n == 1:
+                single.discard(g)
+                prev = owner.pop(g)
+                left = dcount[prev] - 1
+                if left:
+                    dcount[prev] = left
+                else:
+                    del dcount[prev]
+                if flat is not None:
+                    flat.set_donor_singles(prev, left)
         self._version += 1
 
     def release(self, jid: int, gpus: FrozenSet[int]) -> None:
+        occupancy = self.occupancy
+        free = self._free
+        fbs = self._free_by_server
+        fc = self._free_count
+        gps = self.gpus_per_server
+        single = self._single
+        owner = self._single_owner
+        dcount = self._donor_count
+        flat = self._flat
         for g in gpus:
-            occ = self.occupancy[g]
+            occ = occupancy[g]
             if jid not in occ:
                 raise RuntimeError(f"GPU {g} does not hold job {jid}")
             occ.remove(jid)
-            if not occ:
-                self._unmark_single(g)
-                self._free.add(g)
-                self._free_by_server[self.server_of(g)].add(g)
-            elif len(occ) == 1:
+            n = len(occ)
+            if n == 0:
+                single.discard(g)
+                prev = owner.pop(g)
+                left = dcount[prev] - 1
+                if left:
+                    dcount[prev] = left
+                else:
+                    del dcount[prev]
+                if flat is not None:
+                    flat.set_donor_singles(prev, left)
+                free.add(g)
+                sid = g // gps
+                fbs[sid].add(g)
+                fc[sid] += 1
+            elif n == 1:
                 # the surviving tenant becomes the sole owner
-                self._mark_single(g, occ[0])
+                surv = occ[0]
+                single.add(g)
+                owner[g] = surv
+                dcount[surv] = count = dcount.get(surv, 0) + 1
+                if flat is not None:
+                    flat.set_donor_singles(surv, count)
         self._version += 1
 
     def co_runners(self, job: Job) -> Set[int]:

@@ -78,7 +78,7 @@ class DonorBatch:
     __slots__ = ("donors", "jids", "run_mem", "t_run", "rem_run",
                  "_models", "_codes", "_xi_cache")
 
-    def __init__(self, donors: Sequence[Job]) -> None:
+    def __init__(self, donors: Sequence[Job], rem_fn=None) -> None:
         self.donors: List[Job] = list(donors)
         jids = []
         run_mem = []
@@ -90,7 +90,8 @@ class DonorBatch:
             jids.append(d.jid)
             run_mem.append(d.perf.mem_bytes(d.sub_batch))
             t_run.append(d.solo_t_iter)
-            rem_run.append(d.remaining_iters)
+            rem_run.append(d.remaining_iters if rem_fn is None
+                           else rem_fn(d))
             code = model_index.get(d.model)
             if code is None:
                 code = model_index.setdefault(d.model, len(model_index))
@@ -106,13 +107,20 @@ class DonorBatch:
     def __len__(self) -> int:
         return len(self.donors)
 
-    def refresh_progress(self) -> None:
+    def refresh_progress(self, rem_fn=None) -> None:
         """Re-read the donors' remaining iterations (the only per-pass
         mutable column — membership, memory, and iteration times only
-        change with placements, which invalidate the whole batch)."""
+        change with placements, which invalidate the whole batch).
+        ``rem_fn`` reads a donor's remaining work virtually (e.g.
+        ``Simulator.remaining_at``); default is the materialized
+        ``remaining_iters``."""
         rem = self.rem_run
-        for i, d in enumerate(self.donors):
-            rem[i] = d.remaining_iters
+        if rem_fn is None:
+            for i, d in enumerate(self.donors):
+                rem[i] = d.remaining_iters
+        else:
+            for i, d in enumerate(self.donors):
+                rem[i] = rem_fn(d)
 
     def xi_terms(self, new_model: str, interference: InterferenceModel):
         """Per-donor interference constants against ``new_model``:

@@ -25,6 +25,7 @@ from .simulator import HAS_BATCHED_DECISIONS, SchedulerBase, Simulator
 if HAS_BATCHED_DECISIONS:               # vectorized decision core (numpy)
     import numpy as np
     from .pair_batch import DonorBatch, best_sharing_configs
+    from .pass_batch import GridPass
 
 
 # ---------------------------------------------------------------------- #
@@ -71,13 +72,22 @@ class _StaticOrder:
     key; each entry therefore remembers the job's preemption count and
     the view re-keys itself when they disagree. Policies whose key
     cannot change across requeues (arrival order) pass
-    ``requeue_safe=True`` to skip that check."""
+    ``requeue_safe=True`` to skip that check.
+
+    ``terminal_states`` controls which entries compaction may drop.
+    Policies that only ever order the *pending* queue can include
+    ``RUNNING`` (the entry is removed from tracking, so a preempted job
+    re-enters via ``insort`` with a fresh key) — at datacenter scale the
+    running population dwarfs the queue, and keeping those entries makes
+    every ``order()`` call O(running)."""
 
     def __init__(self, key_fn, live_states=(JobState.PENDING,),
-                 requeue_safe=False):
+                 requeue_safe=False,
+                 terminal_states=(JobState.FINISHED,)):
         self._key_fn = key_fn
         self._live = live_states
         self._requeue_safe = requeue_safe
+        self._terminal = terminal_states
         self._entries: List[tuple] = []   # (key, jid, job, preemptions)
         self._tracked: set = set()
         self._compact_backoff = 0   # calls to skip after a no-op compaction
@@ -89,8 +99,9 @@ class _StaticOrder:
 
     def _rekey(self) -> List[tuple]:
         key_fn = self._key_fn
+        terminal = self._terminal
         alive = [e[2] for e in self._entries
-                 if e[2].state is not JobState.FINISHED]
+                 if e[2].state not in terminal]
         self._entries = sorted(
             (key_fn(j), j.jid, j, j.preemptions) for j in alive)
         self._tracked = {j.jid for j in alive}
@@ -98,6 +109,8 @@ class _StaticOrder:
 
     def order(self, *queues) -> List[Job]:
         entries, tracked, key_fn = self._entries, self._tracked, self._key_fn
+        if not entries and not any(queues):
+            return []   # idle pass (most events at datacenter scale)
         for queue in queues:
             for job in queue:
                 jid = job.jid
@@ -124,8 +137,9 @@ class _StaticOrder:
             if self._compact_backoff > 0:
                 self._compact_backoff -= 1
             else:
+                terminal = self._terminal
                 keep = [e for e in entries
-                        if e[2].state is not JobState.FINISHED]
+                        if e[2].state not in terminal]
                 if len(keep) < len(entries):
                     self._entries = keep
                     self._tracked = {e[1] for e in keep}
@@ -172,12 +186,19 @@ class SJF(SchedulerBase):
     reads_running_progress = False
 
     def __init__(self) -> None:
-        self._order = _StaticOrder(lambda j: j.expected_remaining_time)
+        # orders only the pending queue, so started jobs are compactable
+        self._order = _StaticOrder(
+            lambda j: j.expected_remaining_time,
+            terminal_states=(JobState.RUNNING, JobState.FINISHED))
 
     def reset(self) -> None:
         self._order.reset()
 
     def schedule(self, sim: Simulator) -> None:
+        # every PENDING job is in sim.pending, so an empty queue means
+        # nothing to place (most finish events at datacenter scale)
+        if not sim.pending:
+            return
         for job in self._order.order(sim.pending):
             if not _start_exclusive(sim, job):
                 break
@@ -405,12 +426,16 @@ class SJF_FFS(SchedulerBase):
     reads_running_progress = False   # pairs on static mem/perf fields only
 
     def __init__(self) -> None:
-        self._order = _StaticOrder(lambda j: j.expected_remaining_time)
+        self._order = _StaticOrder(
+            lambda j: j.expected_remaining_time,
+            terminal_states=(JobState.RUNNING, JobState.FINISHED))
 
     def reset(self) -> None:
         self._order.reset()
 
     def schedule(self, sim: Simulator) -> None:
+        if not sim.pending:   # nothing to place (see SJF.schedule)
+            return
         cap = sim.cluster.gpu_capacity_bytes
         for job in self._order.order(sim.pending):
             if _start_exclusive(sim, job):
@@ -442,18 +467,27 @@ class SJF_FFS(SchedulerBase):
 class SJF_BSBF(SchedulerBase):
     """Algorithm 1 — Shortest Job First with Best Sharing Benefit First.
 
-    Two decision paths with identical outcomes (pinned by
-    ``tests/test_decision_equivalence.py``):
+    Three decision paths with identical outcomes (pinned by
+    ``tests/test_decision_equivalence.py`` and the differential fuzz
+    harness in ``tests/test_engine_equivalence.py``):
 
-    * ``batched`` (default) — one :func:`repro.core.pair_batch.
-      best_sharing_configs` call evaluates Algorithm 2 against every
-      donor as NumPy array ops; the donor batch is reused across the
-      pending queue until a placement changes the donor set.
+    * ``grid`` (default) — one vectorized pass over the whole pending
+      queue (:class:`repro.core.pass_batch.GridPass`): Algorithm 2 /
+      Theorem 1 evaluated for all pending jobs x all donors in one
+      NumPy grid over flat preallocated tables, placements walked with
+      a masked ``(key, jid)`` argmin (DESIGN.md §14).
+    * ``batched`` — one :func:`repro.core.pair_batch.
+      best_sharing_configs` call per pending job evaluates Algorithm 2
+      against every donor as NumPy array ops; the donor batch is reused
+      across the pending queue until a placement changes the donor set.
     * ``scalar`` — the original per-(pending, donor)
       :func:`best_sharing_config` loop, kept as the reference.
 
     The path comes from the constructor, else the Simulator's
-    ``decision_path`` (``REPRO_SIM_DECISION`` env, default batched).
+    ``decision_path`` (``REPRO_SIM_DECISION`` env, default grid).
+    All paths read donor progress *virtually* via
+    ``Simulator.remaining_at`` (no pre-pass accrual sweep), hence
+    ``reads_running_progress = False``.
 
     ``donor_reconfig=True`` enables the Algorithm-2 extension of
     DESIGN.md §13: when no donor admits the new job at its current
@@ -466,43 +500,65 @@ class SJF_BSBF(SchedulerBase):
     """
 
     name = "sjf-bsbf"
+    # donor remaining work is read virtually (Simulator.remaining_at),
+    # so the engine's pre-schedule accrual sweep is skipped entirely
+    reads_running_progress = False
     progress_scope = "donors"   # schedule() only reads donors' progress
 
     def __init__(self, decision: Optional[str] = None,
                  donor_reconfig: bool = False) -> None:
-        self._order = _StaticOrder(lambda j: j.expected_remaining_time)
-        if decision not in (None, "batched", "scalar"):
+        self._order = _StaticOrder(
+            lambda j: j.expected_remaining_time,
+            terminal_states=(JobState.RUNNING, JobState.FINISHED))
+        if decision not in (None, "grid", "batched", "scalar"):
             raise ValueError(
                 f"unknown decision path {decision!r}; "
-                f"choose from ['batched', 'scalar']")
-        if decision == "batched" and not HAS_BATCHED_DECISIONS:
+                f"choose from ['batched', 'grid', 'scalar']")
+        if decision in ("grid", "batched") and not HAS_BATCHED_DECISIONS:
             raise ValueError(
-                "decision='batched' requires numpy (repro.core.pair_batch)")
+                f"decision={decision!r} requires numpy "
+                f"(repro.core.pair_batch)")
         self.donor_reconfig = donor_reconfig
         if donor_reconfig and decision is None:
             decision = "scalar"   # extension lives on the scalar path
-        if donor_reconfig and decision == "batched":
+        if donor_reconfig and decision in ("grid", "batched"):
             raise ValueError("donor_reconfig requires decision='scalar'")
         self.decision = decision
         # (cluster version, DonorBatch): donor membership / memory /
         # iteration times only change with placements, so the batch (and
         # its per-model xi cache) survives across scheduling passes
         self._donor_cache: Optional[tuple] = None
+        self._grid: Optional[object] = None   # per-sim GridPass
 
     def reset(self) -> None:
         self._order.reset()
         self._donor_cache = None
+        self._grid = None
 
     def schedule(self, sim: Simulator) -> None:
+        # every PENDING job is in sim.pending, so an empty queue means
+        # nothing to place (most finish events at datacenter scale);
+        # arrivals never skip the queue, so no ingest can be missed
+        if not sim.pending:
+            return
         # sim.decision_path is already availability-resolved; a bare sim
         # without the attribute falls back to whatever can actually run
         path = self.decision or getattr(
             sim, "decision_path",
-            "batched" if HAS_BATCHED_DECISIONS else "scalar")
-        if path == "batched":
+            "grid" if HAS_BATCHED_DECISIONS else "scalar")
+        if path == "grid":
+            self._schedule_grid(sim)
+        elif path == "batched":
             self._schedule_batched(sim)
         else:
             self._schedule_scalar(sim)
+
+    # -- vectorized whole-pass path (DESIGN.md §14) --------------------- #
+    def _schedule_grid(self, sim: Simulator) -> None:
+        state = self._grid
+        if state is None or state.sim is not sim:
+            state = self._grid = GridPass(sim)
+        state.schedule(sim, _start_exclusive)
 
     # -- batched decision path ----------------------------------------- #
     def _schedule_batched(self, sim: Simulator) -> None:
@@ -510,6 +566,8 @@ class SJF_BSBF(SchedulerBase):
         cap = cluster.gpu_capacity_bytes
         jobs = sim.jobs
         occupancy = cluster.occupancy
+        # virtual read of donor remaining work — no accrual sweep needed
+        rem_of = getattr(sim, "remaining_at", None)
         donor_batch = None   # rebuilt after any placement changes donors
         for job in self._order.order(sim.pending):
             # Lines 6-8: enough free GPUs -> exclusive consolidated pick.
@@ -524,10 +582,11 @@ class SJF_BSBF(SchedulerBase):
                 cached = self._donor_cache
                 if cached is not None and cached[0] == cluster.version:
                     donor_batch = cached[1]
-                    donor_batch.refresh_progress()
+                    donor_batch.refresh_progress(rem_of)
                 else:
                     donor_batch = DonorBatch(
-                        [jobs[j] for j in sorted(cluster.donor_jids())])
+                        [jobs[j] for j in sorted(cluster.donor_jids())],
+                        rem_fn=rem_of)
                     self._donor_cache = (cluster.version, donor_batch)
             res = best_sharing_configs(job, donor_batch,
                                        sim.interference, cap)
@@ -563,6 +622,8 @@ class SJF_BSBF(SchedulerBase):
     # -- scalar reference path ----------------------------------------- #
     def _schedule_scalar(self, sim: Simulator) -> None:
         cap = sim.cluster.gpu_capacity_bytes
+        # virtual read of donor remaining work — no accrual sweep needed
+        rem_of = getattr(sim, "remaining_at", None)
         for job in self._order.order(sim.pending):
             # Lines 6-8: enough free GPUs -> exclusive consolidated pick.
             if _start_exclusive(sim, job):
@@ -578,7 +639,9 @@ class SJF_BSBF(SchedulerBase):
             blocked = []   # donors with NO memory-feasible sub-batch
             for jid in donor_jids:
                 run = sim.jobs[jid]
-                cfg = best_sharing_config(run, job, sim.interference, cap)
+                cfg = best_sharing_config(
+                    run, job, sim.interference, cap,
+                    rem_run=(rem_of(run) if rem_of is not None else None))
                 if cfg.share:
                     donors.append((cfg, run))
                 elif cfg.decision is None:
@@ -624,10 +687,12 @@ class SJF_BSBF(SchedulerBase):
         free ones) and reconfigure the donor mid-run. Single-donor only:
         a request spanning several reconfigured donors is deferred."""
         best = None
+        rem_of = getattr(sim, "remaining_at", None)
         for jid in sorted(donor_jids):
             run = sim.jobs[jid]
-            cfg = best_sharing_config_donor_scaled(run, job,
-                                                   sim.interference, cap)
+            cfg = best_sharing_config_donor_scaled(
+                run, job, sim.interference, cap,
+                rem_run=(rem_of(run) if rem_of is not None else None))
             if cfg.share and (best is None or cfg.avg_jct < best[0].avg_jct):
                 best = (cfg, run)
         if best is None:

@@ -57,18 +57,22 @@ class Simulator:
         self.reconfig_on_release = reconfig_on_release
         self.engine_name = (engine or os.environ.get("REPRO_SIM_ENGINE")
                             or "heap")
-        # sharing-decision path: "batched" (vectorized Algorithm 2 over
-        # all donors, the default) or "scalar" (the per-pair reference)
+        # sharing-decision path: "grid" (the default — one vectorized
+        # pass over all pending jobs x all donors, DESIGN.md §14),
+        # "batched" (vectorized Algorithm 2 per pending job), or
+        # "scalar" (the per-pair reference). All three produce
+        # bit-identical schedules (tests/test_decision_equivalence.py).
         self.decision_path = (decision
                               or os.environ.get("REPRO_SIM_DECISION")
-                              or "batched")
-        if self.decision_path not in ("batched", "scalar"):
+                              or "grid")
+        if self.decision_path not in ("grid", "batched", "scalar"):
             raise ValueError(
                 f"unknown decision path {self.decision_path!r}; "
-                f"choose from ['batched', 'scalar']")
-        if self.decision_path == "batched" and not HAS_BATCHED_DECISIONS:
+                f"choose from ['batched', 'grid', 'scalar']")
+        if (self.decision_path in ("grid", "batched")
+                and not HAS_BATCHED_DECISIONS):
             # resolve to what will actually run, so sweep rows and bench
-            # artifacts never claim "batched" for a scalar run
+            # artifacts never claim a vectorized path for a scalar run
             self.decision_path = "scalar"
         self.engine = make_engine(self.engine_name, self)
 
@@ -106,6 +110,12 @@ class Simulator:
 
     def effective_t_iter(self, job: Job) -> float:
         return self.engine.effective_t_iter(job)
+
+    def remaining_at(self, job: Job) -> float:
+        """Remaining iterations of ``job`` at the current event time —
+        a virtual read (no progress materialization); see
+        :meth:`repro.core.engine.EngineBase.remaining_at`."""
+        return self.engine.remaining_at(job)
 
     def run(self) -> SimResults:
         return self.engine.run()

@@ -26,7 +26,8 @@ from .interference import InterferenceModel, paper_interference_model
 from .job import ClusterState
 from .schedulers import ALL_POLICIES, make_scheduler
 from .simulator import Simulator
-from .trace import datacenter_trace, physical_trace, simulation_trace
+from .trace import (datacenter_trace, philly_trace, physical_trace,
+                    simulation_trace)
 
 __all__ = [
     "ScenarioSpec", "grid", "normalize_policy", "run_scenario",
@@ -56,10 +57,11 @@ class ScenarioSpec:
     policy: str
     n_jobs: int = 240
     seed: int = 0
-    # trace="datacenter" reads load_scale as a multiplier on the 0.7
-    # target cluster utilization of repro.core.trace.datacenter_trace
+    # trace="datacenter"/"philly" read load_scale as a multiplier on the
+    # 0.7 target cluster utilization of the corresponding trace builder
     load_scale: float = 1.0
-    trace: str = "simulation"    # "simulation" | "physical" | "datacenter"
+    # "simulation" | "physical" | "datacenter" | "philly"
+    trace: str = "simulation"
     n_servers: int = 16
     gpus_per_server: int = 4
     capacity_gb: float = 11.0
@@ -67,7 +69,7 @@ class ScenarioSpec:
     # None lets the Simulator resolve (REPRO_SIM_ENGINE env, else heap)
     engine: Optional[str] = None
     # sharing-decision path: None -> Simulator default (REPRO_SIM_DECISION
-    # env, else the vectorized "batched" core); "scalar" for the reference
+    # env, else the vectorized "grid" pass); "scalar" for the reference
     decision: Optional[str] = None
     collect: Tuple[str, ...] = ()      # extra per-job metrics (below)
     tag: str = ""                      # free-form grouping label
@@ -118,10 +120,20 @@ def _jct_list(res) -> List[float]:
     return res.jct_list()
 
 
+def _queue_percentiles(res) -> Dict[str, float]:
+    """p50/p90/p95/p99 queueing delay — the capacity-planning readout of
+    ``benchmarks/sim_scale.py`` ("what does +10% load do to p95?")."""
+    delays = sorted(j.queueing_delay() for j in res.jobs)
+    if not delays:
+        return {"p50": 0.0, "p90": 0.0, "p95": 0.0, "p99": 0.0}
+    return {f"p{q}": _percentile(delays, q) for q in (50, 90, 95, 99)}
+
+
 _COLLECTORS = {
     "jct_deciles": _jct_deciles,
     "queue_by_model": _queue_by_model,
     "jct_list": _jct_list,
+    "queue_percentiles": _queue_percentiles,
 }
 
 
@@ -138,6 +150,11 @@ def _build_jobs(spec: ScenarioSpec):
                                 load_scale=spec.load_scale)
     if spec.trace == "datacenter":
         return datacenter_trace(
+            n_jobs=spec.n_jobs, seed=spec.seed,
+            n_gpus=spec.n_servers * spec.gpus_per_server,
+            utilization=0.7 * spec.load_scale)
+    if spec.trace == "philly":
+        return philly_trace(
             n_jobs=spec.n_jobs, seed=spec.seed,
             n_gpus=spec.n_servers * spec.gpus_per_server,
             utilization=0.7 * spec.load_scale)

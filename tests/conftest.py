@@ -1,0 +1,30 @@
+"""Shared pytest configuration: hypothesis settings profiles.
+
+Two profiles, selected via the ``HYPOTHESIS_PROFILE`` environment
+variable (default ``dev``):
+
+* ``ci`` — what the GitHub workflow runs: >= 200 examples per property,
+  no per-example deadline (the differential fuzz harness replays five
+  simulations per example), and **derandomized** — the example stream is
+  derived from each test's source, so a CI failure reproduces exactly
+  with ``HYPOTHESIS_PROFILE=ci pytest <nodeid>`` and shrunk
+  counterexamples can be pasted into the regression corpus
+  (``tests/test_engine_equivalence.py::REGRESSION_SPECS``).
+* ``dev`` — fast local iteration: few examples, still no deadline.
+
+Without the ``[test]`` extra installed this module is inert and the
+property tests skip via ``tests/_hypothesis_compat.py``.
+"""
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:   # pragma: no cover - no [test] extra
+    settings = None
+
+if settings is not None:
+    settings.register_profile(
+        "ci", max_examples=200, deadline=None, derandomize=True,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.register_profile("dev", max_examples=20, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))

@@ -1,8 +1,9 @@
 """Full-trace pin for the vectorized decision core: every policy must
 produce *identical* ``SimResults.summary()`` (and event counts) whether
-SJF-BSBF runs the batched NumPy path or the scalar per-pair reference —
-the batched core mirrors the scalar arithmetic operation-for-operation,
-so the pin is exact equality, tighter than the 1e-9 acceptance bound."""
+SJF-BSBF runs the grid whole-pass path, the batched per-job NumPy path,
+or the scalar per-pair reference — the vectorized cores mirror the
+scalar arithmetic operation-for-operation, so the pin is exact
+equality, tighter than the 1e-9 acceptance bound."""
 import pytest
 
 from repro.core import (ClusterState, InterferenceModel, Simulator,
@@ -34,31 +35,34 @@ def _assert_identical(a, b):
         assert ja.placement == jb.placement
 
 
+@pytest.mark.parametrize("decision", ["batched", "grid"])
 @pytest.mark.parametrize("policy", sorted(ALL_POLICIES))
-def test_batched_matches_scalar_paper_model(policy):
-    _assert_identical(_run(policy, "scalar"), _run(policy, "batched"))
+def test_vectorized_matches_scalar_paper_model(policy, decision):
+    _assert_identical(_run(policy, "scalar"), _run(policy, decision))
 
 
+@pytest.mark.parametrize("decision", ["batched", "grid"])
 @pytest.mark.parametrize("interference", [
     InterferenceModel(),                  # structural fallback
     InterferenceModel(global_xi=1.4),     # Fig. 6b style injection
 ], ids=["structural", "global-xi"])
-def test_batched_matches_scalar_other_xi_regimes(interference):
+def test_vectorized_matches_scalar_other_xi_regimes(interference, decision):
     _assert_identical(_run("sjf-bsbf", "scalar", interference=interference),
-                      _run("sjf-bsbf", "batched", interference=interference))
+                      _run("sjf-bsbf", decision, interference=interference))
 
 
-def test_batched_matches_scalar_datacenter_trace():
-    def run(decision):
+@pytest.mark.parametrize("decision", ["batched", "grid"])
+def test_vectorized_matches_scalar_datacenter_trace(decision):
+    def run(d):
         jobs = datacenter_trace(n_jobs=150, seed=3, n_gpus=64)
         cluster = ClusterState(n_servers=16, gpus_per_server=4,
                                gpu_capacity_bytes=11 * GB)
         sim = Simulator(cluster, jobs, make_scheduler("sjf-bsbf"),
                         interference=paper_interference_model(),
-                        decision=decision)
+                        decision=d)
         return sim.run()
 
-    _assert_identical(run("scalar"), run("batched"))
+    _assert_identical(run("scalar"), run(decision))
 
 
 def test_scan_heap_agree_on_non_divisor_sub_batch():
@@ -100,12 +104,12 @@ def test_scan_heap_agree_on_non_divisor_sub_batch():
         assert res_heap.summary()[key] == pytest.approx(val, rel=1e-9), key
 
 
-def test_default_decision_is_batched(monkeypatch):
+def test_default_decision_is_grid(monkeypatch):
     monkeypatch.delenv("REPRO_SIM_DECISION", raising=False)
     jobs = simulation_trace(n_jobs=8, seed=0)
     cluster = ClusterState(n_servers=4, gpus_per_server=4)
     sim = Simulator(cluster, jobs, make_scheduler("sjf-bsbf"))
-    assert sim.decision_path == "batched"
+    assert sim.decision_path == "grid"
 
 
 def test_decision_env_and_validation(monkeypatch):

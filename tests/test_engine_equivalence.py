@@ -1,13 +1,31 @@
 """The event-heap engine must reproduce the pre-refactor scan engine
 exactly: same event count and per-job finish times on a seeded trace for
 every policy, under the paper's pair-table interference model, the
-structural fallback model, and a global-xi injection (DESIGN.md §9)."""
+structural fallback model, and a global-xi injection (DESIGN.md §9).
+
+The second half of this file is the differential fuzz harness
+(DESIGN.md §14): hypothesis generates small adversarial traces — random
+arrivals, GPU demands, iteration counts — plus a chaos plan that injects
+``preempt_job`` / ``reconfigure_job`` calls mid-run, and every spec is
+replayed through HeapEngine vs ScanEngine (approximate equality, like
+the seeded tests above) and through the grid / batched / scalar
+sharing-decision paths on the same engine (bit-identical event logs and
+``SimResults.summary()``). Any spec hypothesis ever shrinks to a failure
+is appended to ``REGRESSION_SPECS`` so it keeps running as a plain
+parametrized test in environments without hypothesis."""
+import random
+
 import pytest
 
 from repro.core import (ClusterState, InterferenceModel, Simulator,
                         make_scheduler, paper_interference_model,
                         simulation_trace)
+from repro.core.job import Job
+from repro.core.perf_model import GPU_2080TI
 from repro.core.schedulers import ALL_POLICIES
+from repro.core.tasks import PAPER_TASK_PROFILES
+
+from _hypothesis_compat import given, st
 
 REL = 1e-6
 
@@ -108,3 +126,171 @@ def test_heap_deadlock_detection():
     sim = Simulator(cluster, jobs, make_scheduler("fifo"), engine="heap")
     with pytest.raises(RuntimeError, match="deadlock"):
         sim.run()
+
+
+# ===================================================================== #
+# Differential fuzz harness (DESIGN.md §14)
+# ===================================================================== #
+#
+# A trace *spec* is a tuple of per-job primitives
+#     (gap_centiseconds, model_index, gpus, iters)
+# and a *chaos* plan
+#     (chaos_seed, preempt_every, reconfig_every)
+# where every-N of 0 disables that injection. Everything is integers so
+# hypothesis shrinks cleanly and failed examples paste verbatim into
+# REGRESSION_SPECS below.
+
+_MODEL_NAMES = sorted(PAPER_TASK_PROFILES)
+_FUZZ_GPUS = (1, 2, 4, 8, 12, 16)
+
+
+def _jobs_from_spec(spec):
+    jobs = []
+    t = 0.0
+    for jid, (gap_cs, model_i, gpus, iters) in enumerate(spec):
+        t += gap_cs / 100.0
+        name = _MODEL_NAMES[model_i % len(_MODEL_NAMES)]
+        prof = PAPER_TASK_PROFILES[name]
+        jobs.append(Job(jid=jid, model=name, arrival=t, gpus=gpus,
+                        iters=float(iters), batch=prof.default_batch,
+                        perf=prof.perf_params(gpus, GPU_2080TI)))
+    return jobs
+
+
+class ChaosScheduler:
+    """Wraps a policy and, after every scheduling pass, deterministically
+    injects the mutations schedulers are allowed to make — preempting a
+    running job, shrinking a running job's sub-batch mid-run
+    (``reconfigure_job``) — from a seeded RNG. The injection sequence
+    depends only on the pass count and the (sorted) running set, so two
+    simulators producing identical schedules receive identical chaos;
+    any divergence the chaos amplifies is a real engine/decision-path
+    divergence."""
+
+    def __init__(self, inner, chaos_seed, preempt_every, reconfig_every):
+        self.inner = inner
+        self.name = inner.name
+        self.preemptive = inner.preemptive
+        self.tick_interval = inner.tick_interval
+        self.tick_only = inner.tick_only
+        self.reads_running_progress = inner.reads_running_progress
+        self.progress_scope = inner.progress_scope
+        self._seed = chaos_seed
+        self._preempt_every = preempt_every
+        self._reconfig_every = reconfig_every
+        self.reset()
+
+    def reset(self):
+        self.inner.reset()
+        self._rng = random.Random(self._seed)
+        self._passes = 0
+
+    def schedule(self, sim):
+        self.inner.schedule(sim)
+        self._passes += 1
+        rng = self._rng
+        if self._preempt_every and self._passes % self._preempt_every == 0:
+            running = sorted(sim.running)
+            if running:
+                sim.preempt_job(sim.running[
+                    running[rng.randrange(len(running))]])
+                # preempt-then-place, like a real preemptive pass — the
+                # victim must not strand with no future event to revive
+                # it (non-preemptive policies never tick)
+                self.inner.schedule(sim)
+        if self._reconfig_every and self._passes % self._reconfig_every == 0:
+            running = sorted(sim.running)
+            if running:
+                job = sim.running[running[rng.randrange(len(running))]]
+                if job.sub_batch > 1:
+                    # shrinking the sub-batch only reduces the memory
+                    # footprint, so the reconfig is always feasible
+                    sim.reconfigure_job(job, (job.sub_batch + 1) // 2)
+
+
+def _fuzz_run(spec, chaos, policy, engine, decision=None):
+    jobs = _jobs_from_spec(spec)
+    cluster = ClusterState(n_servers=4, gpus_per_server=4,
+                           gpu_capacity_bytes=11 * 2 ** 30)
+    sched = ChaosScheduler(make_scheduler(policy), *chaos)
+    sim = Simulator(cluster, jobs, sched,
+                    interference=paper_interference_model(),
+                    engine=engine, decision=decision, max_events=500_000)
+    res = sim.run()
+    return res, list(sim.log), res.summary()
+
+
+def _fuzz_check(policy, spec, chaos):
+    # 1. engines: heap vs scan on the default decision path, equal up to
+    #    the accrual-order float tolerance of the seeded tests above
+    res_h, log_h, sum_h = _fuzz_run(spec, chaos, policy, "heap")
+    res_s, _, _ = _fuzz_run(spec, chaos, policy, "scan")
+    _assert_equivalent(res_s, res_h)
+    # 2. sharing-decision paths on the heap engine: the grid pass (the
+    #    default, re-run explicitly), the per-job batched path, and the
+    #    scalar reference must be BIT-identical — same event log record
+    #    for record, same summary dict. (Without numpy all three resolve
+    #    to scalar and the comparison is trivially true.)
+    for decision in ("grid", "batched", "scalar"):
+        _, log_d, sum_d = _fuzz_run(spec, chaos, policy, "heap", decision)
+        assert log_d == log_h, (
+            f"{decision} event log diverged from the default path "
+            f"({len(log_d)} vs {len(log_h)} records)")
+        assert sum_d == sum_h, f"{decision} summary diverged"
+
+
+# Shrunk-regression corpus: any spec hypothesis ever shrank to a failure
+# is appended here (name, spec, chaos) so it keeps running as a plain
+# parametrized test — with or without hypothesis installed. The seeds
+# below pin the structurally nasty shapes the harness is built around.
+REGRESSION_SPECS = [
+    # burst of large jobs saturating the cluster, small jobs queue behind
+    ("burst-large-then-small",
+     ((0, 0, 16, 300), (0, 1, 16, 300), (0, 2, 1, 60), (1, 3, 1, 60)),
+     (7, 3, 2)),
+    # lone job repeatedly preempted (restart-penalty accounting)
+    ("lone-job-preempt-loop", ((0, 4, 4, 400),), (1, 2, 0)),
+    # simultaneous arrivals, jid tie-breaks under chaos reconfigs
+    ("simultaneous-arrivals",
+     ((0, 0, 2, 150), (0, 1, 2, 150), (0, 2, 2, 150), (0, 3, 2, 150)),
+     (11, 0, 2)),
+    # staggered mix with both injections active
+    ("staggered-mixed-chaos",
+     ((50, 5, 8, 500), (200, 0, 1, 40), (0, 1, 12, 800), (300, 2, 4, 90),
+      (10, 3, 1, 25)),
+     (3, 4, 3)),
+    # chaos disabled: pure trace-shape differential
+    ("no-chaos-baseline",
+     ((0, 0, 1, 20), (10000, 1, 16, 1000), (0, 2, 8, 200)),
+     (0, 0, 0)),
+]
+
+
+@pytest.mark.parametrize("policy", sorted(ALL_POLICIES))
+@pytest.mark.parametrize(
+    "case", REGRESSION_SPECS, ids=[c[0] for c in REGRESSION_SPECS])
+def test_fuzz_regression_corpus(policy, case):
+    _, spec, chaos = case
+    _fuzz_check(policy, spec, chaos)
+
+
+_JOB_ST = st.tuples(
+    st.integers(min_value=0, max_value=30000),            # arrival gap (cs)
+    st.integers(min_value=0, max_value=len(_MODEL_NAMES) - 1),
+    st.sampled_from(_FUZZ_GPUS),
+    st.integers(min_value=20, max_value=2000),            # iterations
+)
+_SPEC_ST = st.lists(_JOB_ST, min_size=1, max_size=12)
+_CHAOS_ST = st.tuples(
+    st.integers(min_value=0, max_value=2 ** 16),          # chaos seed
+    st.sampled_from((0, 2, 3, 5)),                        # preempt every
+    st.sampled_from((0, 2, 4)),                           # reconfig every
+)
+
+
+@pytest.mark.parametrize("policy", sorted(ALL_POLICIES))
+@given(spec=_SPEC_ST, chaos=_CHAOS_ST)
+def test_fuzz_differential(policy, spec, chaos):
+    """Random traces + chaos injections: heap == scan (approx), and
+    grid == batched == scalar (bit-identical logs), for every policy."""
+    _fuzz_check(policy, tuple(spec), tuple(chaos))

@@ -1,0 +1,91 @@
+"""Regression pin for the :class:`repro.core.engine.SimResults`
+degenerate-input contract (documented on the class): ``avg_jct`` /
+``avg_queueing`` return **0.0 silently when the selection is empty** —
+an empty job list, or a large/small split with no members. Downstream
+consumers (sweep collectors, bench acceptance checks) average these
+averages and must be able to rely on 0.0-with-empty-selection staying
+0.0 rather than becoming an exception or NaN."""
+import pytest
+
+from repro.core import (ClusterState, Simulator, make_scheduler,
+                        paper_interference_model)
+from repro.core.engine import SimResults
+from repro.core.job import Job
+from repro.core.perf_model import GPU_2080TI
+from repro.core.tasks import PAPER_TASK_PROFILES
+
+
+def _mk_job(jid, gpus, iters=100.0, arrival=0.0):
+    name = sorted(PAPER_TASK_PROFILES)[jid % len(PAPER_TASK_PROFILES)]
+    prof = PAPER_TASK_PROFILES[name]
+    return Job(jid=jid, model=name, arrival=arrival, gpus=gpus,
+               iters=iters, batch=prof.default_batch,
+               perf=prof.perf_params(gpus, GPU_2080TI))
+
+
+def _run(jobs):
+    cluster = ClusterState(n_servers=4, gpus_per_server=4,
+                           gpu_capacity_bytes=11 * 2 ** 30)
+    sim = Simulator(cluster, jobs, make_scheduler("sjf"),
+                    interference=paper_interference_model())
+    return sim.run()
+
+
+def test_empty_job_list():
+    res = _run([])
+    assert res.makespan == 0.0
+    assert res.events == 0
+    assert res.avg_jct() == 0.0
+    assert res.avg_jct(True) == 0.0
+    assert res.avg_jct(False) == 0.0
+    assert res.avg_queueing() == 0.0
+    assert res.jct_list() == []
+    assert all(v == 0.0 for v in res.summary().values())
+
+
+def test_empty_results_container_directly():
+    res = SimResults(jobs=[], makespan=0.0, events=0, name="x")
+    assert res.avg_jct() == 0.0
+    assert res.avg_queueing() == 0.0
+    assert res.summary()["avg_jct_large"] == 0.0
+
+
+def test_single_job():
+    res = _run([_mk_job(0, gpus=2)])
+    assert len(res.jobs) == 1
+    job = res.jobs[0]
+    assert job.finish_time is not None
+    assert res.avg_jct() == pytest.approx(job.jct())
+    assert res.makespan == pytest.approx(job.finish_time)
+    # a lone job on an empty cluster never queues
+    assert res.avg_queueing() == 0.0
+    # the 2-GPU job is "small" (paper split: large means > 4 GPUs)
+    assert res.avg_jct(False) == pytest.approx(job.jct())
+    assert res.avg_jct(True) == 0.0
+
+
+def test_all_small_selection():
+    """A trace with only <=4-GPU jobs: the large-side aggregates are
+    silently 0.0, never an error — and vice versa."""
+    res = _run([_mk_job(i, gpus=g, arrival=float(i))
+                for i, g in enumerate((1, 2, 4, 4))])
+    assert res.avg_jct(False) > 0.0
+    assert res.avg_jct(True) == 0.0
+    assert res.avg_queueing(True) == 0.0
+    assert res.summary()["avg_jct_large"] == 0.0
+
+
+def test_all_large_selection():
+    res = _run([_mk_job(i, gpus=8, arrival=float(i)) for i in range(3)])
+    assert res.avg_jct(True) > 0.0
+    assert res.avg_jct(False) == 0.0
+    assert res.avg_queueing(False) == 0.0
+    assert res.summary()["avg_jct_small"] == 0.0
+
+
+def test_selection_is_strictly_greater_than_4_gpus():
+    """Pin the split boundary itself: 4 GPUs is small, 8 is large."""
+    res = _run([_mk_job(0, gpus=4), _mk_job(1, gpus=8, arrival=1.0)])
+    four, eight = sorted(res.jobs, key=lambda j: j.gpus)
+    assert res.avg_jct(False) == pytest.approx(four.jct())
+    assert res.avg_jct(True) == pytest.approx(eight.jct())

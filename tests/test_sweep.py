@@ -71,3 +71,18 @@ def test_global_xi_and_physical_trace():
     with pytest.raises(ValueError, match="unknown collect"):
         run_scenario(ScenarioSpec(policy="sjf", n_jobs=4,
                                   collect=("nope",)))
+
+
+def test_philly_trace_and_queue_percentiles():
+    """The sweep runner's capacity-planning surface (DESIGN.md §14):
+    trace="philly" regenerates deterministically in the worker, and
+    the queue_percentiles collector reports a sorted p50<=p95<=p99."""
+    spec = ScenarioSpec(policy="sjf", trace="philly", n_jobs=60, seed=2,
+                        n_servers=4, gpus_per_server=4, load_scale=2.0,
+                        collect=("queue_percentiles",))
+    a, b = run_scenario(spec), run_scenario(spec)
+    drop = lambda r: {k: v for k, v in r.items() if k != "wall_seconds"}
+    assert drop(a) == drop(b)
+    q = a["queue_percentiles"]
+    assert set(q) == {"p50", "p90", "p95", "p99"}
+    assert q["p50"] <= q["p90"] <= q["p95"] <= q["p99"]

@@ -1,9 +1,18 @@
-"""Workload generator tests."""
+"""Workload generator tests, including the distributional property
+tests for the datacenter-scale generators (``datacenter_trace``,
+``philly_trace``): determinism per seed, non-decreasing arrivals,
+demand/duration tails inside KS-style sanity bounds of the configured
+distributions, and every sampled job schedulable on the cluster the
+trace was generated for."""
+import math
+
 import pytest
 
+from _hypothesis_compat import given, st
 from repro.core.tasks import PAPER_TASK_PROFILES
-from repro.core.trace import (DATACENTER_GPU_DEMAND, TraceConfig,
-                              datacenter_trace, generate_trace,
+from repro.core.trace import (DATACENTER_GPU_DEMAND, PHILLY_GPU_DEMAND,
+                              TraceConfig, datacenter_trace,
+                              generate_trace, philly_trace,
                               physical_trace, simulation_trace)
 
 
@@ -82,3 +91,132 @@ def test_perf_params_scale_with_gpus():
     j2 = generate_trace(cfg1)[0]
     j16 = generate_trace(cfg2)[0]
     assert j16.perf.msg_bytes > j2.perf.msg_bytes
+
+
+# ===================================================================== #
+# Philly-shaped trace (DESIGN.md §14; benchmarks/sim_scale.py)
+# ===================================================================== #
+
+GB = 2 ** 30
+
+
+def _key(jobs):
+    return [(j.model, j.arrival, j.gpus, j.iters, j.batch) for j in jobs]
+
+
+def test_philly_trace_determinism():
+    a = philly_trace(n_jobs=300, seed=21, n_gpus=128)
+    b = philly_trace(n_jobs=300, seed=21, n_gpus=128)
+    assert _key(a) == _key(b)
+    c = philly_trace(n_jobs=300, seed=22, n_gpus=128)
+    assert _key(a) != _key(c)
+
+
+def test_philly_trace_arrivals_sorted_and_demand_support():
+    jobs = philly_trace(n_jobs=500, seed=5, n_gpus=256)
+    arr = [j.arrival for j in jobs]
+    assert arr == sorted(arr)
+    demands = {g for g, _ in PHILLY_GPU_DEMAND}
+    assert all(j.gpus in demands and j.gpus <= 256 for j in jobs)
+    assert [j.jid for j in jobs] == list(range(500))
+
+
+def test_philly_gpu_demand_matches_configured_cdf():
+    """KS-style bound: the empirical demand CDF stays within 0.05 of
+    the configured one at n=2000 (the 1% KS critical distance is
+    ~0.036; the slack covers the seeded draw)."""
+    jobs = philly_trace(n_jobs=2000, seed=11, n_gpus=1024)
+    n = len(jobs)
+    acc = 0.0
+    for g, p in PHILLY_GPU_DEMAND:
+        acc += p
+        empirical = sum(1 for j in jobs if j.gpus <= g) / n
+        assert abs(empirical - acc) < 0.05, f"CDF at {g} GPUs"
+    # the thin 32+ tail is present at this sample size (p ~ 3%)
+    assert any(j.gpus >= 32 for j in jobs)
+
+
+def test_philly_duration_tail_matches_lognormal():
+    """Solo durations (iters * solo t_iter) must look like the
+    configured log-normal: sample median near ``median_seconds``, the
+    heavy tail realized (p90/p50 well above 1), and every duration
+    inside the clip bounds (modulo iteration rounding)."""
+    jobs = philly_trace(n_jobs=2000, seed=13, n_gpus=1024,
+                        median_seconds=600.0, sigma=1.8)
+    durs = sorted(j.iters * j.solo_t_iter for j in jobs)
+    n = len(durs)
+    median = durs[n // 2]
+    # stderr of the log-median is sigma * 1.25 / sqrt(n) ~ 5%; allow 4x
+    assert 600.0 * 0.8 < median < 600.0 * 1.25
+    assert durs[int(0.9 * n)] / median > math.exp(1.28 * 1.8) * 0.5
+    t_iter_max = max(j.solo_t_iter for j in jobs)
+    assert durs[0] >= 30.0 * 0.9 - t_iter_max
+    assert durs[-1] <= 30.0 * 86400.0 * 1.01 + t_iter_max
+
+
+def test_philly_arrivals_are_diurnal():
+    """Arrivals must oscillate with the configured day cycle: the mean
+    of sin(2*pi*(t - 6h)/24h) over arrival times estimates amp/2 (0.25
+    at the default amplitude); a homogeneous process estimates ~0."""
+    jobs = philly_trace(n_jobs=2000, seed=17, n_gpus=64)
+    assert jobs[-1].arrival > 2 * 86400.0   # spans multiple days
+    stat = sum(math.sin(2.0 * math.pi * (j.arrival - 21600.0) / 86400.0)
+               for j in jobs) / len(jobs)
+    assert stat > 0.1
+    flat = philly_trace(n_jobs=2000, seed=17, n_gpus=64,
+                        diurnal_amplitude=0.0)
+    stat0 = sum(math.sin(2.0 * math.pi * (j.arrival - 21600.0) / 86400.0)
+                for j in flat) / len(flat)
+    assert abs(stat0) < 0.1
+
+
+def test_philly_utilization_scales_arrival_rate():
+    relaxed = philly_trace(n_jobs=300, seed=4, n_gpus=128, utilization=0.5)
+    loaded = philly_trace(n_jobs=300, seed=4, n_gpus=128, utilization=1.0)
+    assert loaded[-1].arrival < relaxed[-1].arrival
+
+
+@pytest.mark.parametrize("mk,kw", [
+    (philly_trace, {}),
+    (datacenter_trace, {}),
+])
+def test_trace_jobs_schedulable_on_configured_cluster(mk, kw):
+    """Every sampled job must be placeable on the cluster the trace
+    was generated for: demand capped at the cluster size and the solo
+    memory footprint inside the 11 GB bench GPU at the default
+    sub-batch."""
+    jobs = mk(n_jobs=400, seed=3, n_gpus=64, **kw)
+    for j in jobs:
+        assert 1 <= j.gpus <= 64
+        assert j.iters >= 10
+        assert j.perf.mem_bytes(j.sub_batch) <= 11 * GB
+
+
+@given(seed=st.integers(min_value=0, max_value=2 ** 16))
+def test_philly_trace_properties_hold_for_any_seed(seed):
+    """Per-seed invariants (hypothesis): determinism, sorted arrivals,
+    configured demand support, clip-bounded durations, schedulability."""
+    a = philly_trace(n_jobs=40, seed=seed, n_gpus=32)
+    b = philly_trace(n_jobs=40, seed=seed, n_gpus=32)
+    assert _key(a) == _key(b)
+    arr = [j.arrival for j in a]
+    assert arr == sorted(arr)
+    demands = {g for g, _ in PHILLY_GPU_DEMAND}
+    for j in a:
+        assert j.gpus in demands and j.gpus <= 32
+        assert j.iters >= 10
+        assert j.perf.mem_bytes(j.sub_batch) <= 11 * GB
+        assert j.iters * j.solo_t_iter <= 30.0 * 86400.0 * 1.01 + 1.0
+
+
+@given(seed=st.integers(min_value=0, max_value=2 ** 16))
+def test_datacenter_trace_properties_hold_for_any_seed(seed):
+    a = datacenter_trace(n_jobs=40, seed=seed, n_gpus=32)
+    b = datacenter_trace(n_jobs=40, seed=seed, n_gpus=32)
+    assert _key(a) == _key(b)
+    arr = [j.arrival for j in a]
+    assert arr == sorted(arr)
+    for j in a:
+        assert 1 <= j.gpus <= 32
+        assert 200 <= j.iters <= 50000 * 1.01
+        assert j.perf.mem_bytes(j.sub_batch) <= 11 * GB
