@@ -1,0 +1,56 @@
+"""Kernel autotune sweep driver: time every block/chunk candidate per
+shape class against the XLA reference, persist the winners.
+
+Writes two artifacts:
+
+* ``artifacts/bench/autotune.json`` — the versioned table
+  ``repro.kernels.ops`` consults at call time (winner config per shape
+  class, or ``backend: "ref"`` where XLA beats every Pallas candidate).
+* ``artifacts/bench/BENCH_autotune.json`` — the full sweep record: every
+  candidate's walltime per class, the chosen config, and its
+  ``speedup_vs_default`` (>= 1.0 by construction — the hard-coded
+  default is always in the measured candidate set).
+
+On this CPU container the kernels run in interpret mode, so the sweep
+mostly selects the reference for flash-attention (XLA wins at interpret
+overheads) and tuned chunks for the SSD scan; a TPU re-run overwrites
+the table with native-kernel timings (entries are keyed by backend and
+ignored when loaded on a different one).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.autotune_sweep            # full
+    PYTHONPATH=src python -m benchmarks.autotune_sweep --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.kernels import autotune
+
+from .common import save_json
+
+
+def run(smoke: bool = False, iters=None, verbose: bool = True):
+    table, bench = autotune.run_autotune(smoke=smoke, iters=iters)
+    table_path = autotune.save_artifact(table)
+    bench_path = save_json("BENCH_autotune.json", bench)
+    if verbose:
+        for key, e in sorted(table["entries"].items()):
+            cfg = {k: v for k, v in e.items()
+                   if k in ("block_q", "block_k", "chunk")}
+            print(f"{key:<42} -> {e['backend']:<6} {cfg} "
+                  f"{e['speedup_vs_default']:.2f}x vs default "
+                  f"(best {e['t_best'] * 1e3:.2f}ms, "
+                  f"ref {e['t_ref'] * 1e3:.2f}ms)")
+        print(f"wrote {table_path}")
+        print(f"wrote {bench_path}")
+    return table, bench
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny candidate grid / few iters for CI")
+    ap.add_argument("--iters", type=int, default=None)
+    args = ap.parse_args()
+    run(smoke=args.smoke, iters=args.iters)

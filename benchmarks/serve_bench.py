@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.kernels import autotune as _autotune
 from repro.launch import serve
 from repro.launch.engine import DecodeEngine
 from repro.models import init_cache, init_params
@@ -195,7 +196,65 @@ def bench_engine(*, tokens: int, iters: int):
     t = _time(run, iters, warmup=0)
     return {"n_requests": n_req, "n_slots": n_slots,
             "tokens_per_request": tokens,
-            "tok_s": n_req * tokens / t}
+            "tok_s": n_req * tokens / t,
+            # paging wins must be measurable, not just asserted: surface
+            # the engine's per-run counters (wasted_slot_steps counts
+            # inactive/overrun slot-steps whose tokens are discarded)
+            "stats": dict(eng.stats)}
+
+
+def bench_engine_paged(*, iters: int, smoke: bool):
+    """Dense vs paged engine at EQUAL cache memory.  The dense engine
+    pays ``max_len`` rows per slot, so 4 slots exhaust the budget; the
+    paged engine spends the same rows as a shared page pool and admits
+    every request that fits in *pages actually used* — 16 concurrent
+    slots for the same footprint (4x), with bitwise-identical tokens."""
+    cfg = _cfg("minicpm-2b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    max_len = 64 if smoke else 128
+    page_size = 8 if smoke else 16
+    tokens = 8 if smoke else 16
+    dense_slots, paged_slots, n_req, segment = 4, 16, 16, 8
+    # equal memory: pool rows == dense rows (dense_slots * max_len)
+    n_pages = dense_slots * max_len // page_size
+    prompts = [rng.integers(0, cfg.vocab, (PROMPT_LEN,))
+               for _ in range(n_req)]
+
+    dense = DecodeEngine(cfg, params, n_slots=dense_slots, max_len=max_len,
+                         segment=segment)
+    paged = DecodeEngine(cfg, params, n_slots=paged_slots, max_len=max_len,
+                         segment=segment, paged=True, page_size=page_size,
+                         n_pages=n_pages)
+
+    def run_eng(eng):
+        def go():
+            rids = [eng.submit(p, tokens) for p in prompts]
+            eng.run()
+            return [eng.outputs[r] for r in rids]
+        return go
+
+    out_d = run_eng(dense)()                      # warmup + identity
+    out_p = run_eng(paged)()
+    identical = out_d == out_p
+    assert identical, "paged engine tokens diverge from dense"
+    t_dense = _time(run_eng(dense), iters, warmup=0)
+    t_paged = _time(run_eng(paged), iters, warmup=0)
+    return {
+        "n_requests": n_req, "tokens_per_request": tokens,
+        "max_len": max_len, "page_size": page_size, "n_pages": n_pages,
+        "cache_rows": dense_slots * max_len,      # equal for both engines
+        "dense": {"n_slots": dense_slots,
+                  "tok_s": n_req * tokens / t_dense,
+                  "stats": dict(dense.stats)},
+        "paged": {"n_slots": paged_slots,
+                  "tok_s": n_req * tokens / t_paged,
+                  "stats": dict(paged.stats)},
+        "tokens_identical": identical,
+        # the acceptance ratio: concurrent requests at equal cache memory
+        "capacity_ratio": (paged.stats["peak_active_slots"]
+                           / max(1, dense.stats["peak_active_slots"])),
+    }
 
 
 def run(smoke: bool = False, verbose: bool = True):
@@ -211,9 +270,15 @@ def run(smoke: bool = False, verbose: bool = True):
     payload = {
         "decode": decode,
         "engine": bench_engine(tokens=tokens, iters=max(1, iters - 1)),
+        "engine_paged": bench_engine_paged(iters=max(1, iters - 1),
+                                           smoke=smoke),
         "meta": {"batch": BATCH, "prompt_len": PROMPT_LEN,
                  "new_tokens": tokens, "backend": jax.default_backend(),
                  "smoke": smoke, "iters": iters,
+                 # kernel rows run tuned-or-fallback routing when the
+                 # autotune artifact is present (fallback is bitwise
+                 # identical, so identity asserts are unaffected)
+                 "autotune_active": _autotune.get_table() is not None,
                  "note": "kernel timings are interpret-mode on CPU"},
     }
     path = save_json("BENCH_serve.json", payload)
@@ -229,7 +294,18 @@ def run(smoke: bool = False, verbose: bool = True):
                   f"prefill one-shot {row['prefill']['one_shot_speedup']:.1f}x)")
         eng = payload["engine"]
         print(f"continuous batching: {eng['n_requests']} reqs / "
-              f"{eng['n_slots']} slots -> {eng['tok_s']:.1f} tok/s")
+              f"{eng['n_slots']} slots -> {eng['tok_s']:.1f} tok/s "
+              f"(wasted slot-steps {eng['stats']['wasted_slot_steps']})")
+        pg = payload["engine_paged"]
+        ps_, pd_ = pg["paged"], pg["dense"]
+        print(f"paged vs dense @ {pg['cache_rows']} cache rows: "
+              f"{ps_['stats']['peak_active_slots']} vs "
+              f"{pd_['stats']['peak_active_slots']} concurrent "
+              f"({pg['capacity_ratio']:.1f}x), "
+              f"{ps_['tok_s']:.1f} vs {pd_['tok_s']:.1f} tok/s, "
+              f"occupancy {ps_['stats']['page_occupancy']:.2f}, "
+              f"fragmentation {ps_['stats']['page_fragmentation']:.2f}, "
+              f"identical={pg['tokens_identical']}")
         print(f"wrote {path}")
     return payload
 

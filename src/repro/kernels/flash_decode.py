@@ -83,7 +83,11 @@ def flash_decode(q, k, v, lengths, *, block_k=128, interpret=False):
     assert one == 1, q.shape
     s = k.shape[2]
     assert k.shape == v.shape == (b, h, s, d), (k.shape, v.shape)
-    bk = min(block_k, s)
+    # No silent clamping: the requested (possibly autotuned) block size is
+    # honored exactly; caches shorter than one block are zero-padded up to
+    # it, so the tuned and executed block sizes can never diverge.
+    assert block_k > 0, block_k
+    bk = block_k
     if s % bk:
         sp = bk * pl.cdiv(s, bk)
         pad = ((0, 0), (0, 0), (0, sp - s), (0, 0))
@@ -118,4 +122,115 @@ def flash_decode(q, k, v, lengths, *, block_k=128, interpret=False):
         ],
         interpret=interpret,
     )(lens, qr, kr, vr)
+    return out.reshape(b, h, 1, d)
+
+
+# ---------------------------------------------------------------------- #
+# paged variant — KV lives in a shared page pool, addressed per slot via
+# a block table (DESIGN.md §15)
+# ---------------------------------------------------------------------- #
+def _flash_decode_paged_kernel(pages_ref, len_ref, q_ref, k_ref, v_ref,
+                               o_ref, m_ref, l_ref, acc_ref, *,
+                               page_size: int, n_pages_tab: int,
+                               n_heads: int):
+    """Grid (B*H, P): one logical page per kv step.  ``pages_ref`` and
+    ``len_ref`` are scalar-prefetch SMEM operands — the page table drives
+    the k/v BlockSpec index maps (which physical pool page to DMA next),
+    and the length masks the invalid tail.  Unassigned table entries
+    (-1) are clamped to pool page 0 by the index map; every position of
+    such a page lies at or beyond the valid length, so its probabilities
+    are zeroed exactly (same NEG_INF discipline as the dense kernel)."""
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bi = pl.program_id(0) // n_heads
+    q = q_ref[0].astype(jnp.float32)               # (1, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (PS, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    d = q.shape[-1]
+    s = jnp.dot(q * (d ** -0.5), k.T,
+                preferred_element_type=jnp.float32)  # (1, PS)
+    kpos = ki * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    valid = kpos < len_ref[bi]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_pages_tab - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_decode_paged(q, k_pool, v_pool, pages, lengths, *,
+                       interpret=False):
+    """Paged flash decode. q: (B, H, 1, D); k_pool/v_pool:
+    (N_pages, page_size, H_kv, D) shared page pools; pages: (B, P) i32
+    per-slot page table (-1 = unassigned); lengths: (B,) valid rows.
+    Returns (B, H, 1, D).
+
+    GQA is resolved in the BlockSpec index map (head ``h`` reads kv head
+    ``h // groups`` of its page) — the kv heads are never materialized at
+    ``H``.  The page table rides in SMEM via scalar prefetch, so the
+    indirection costs nothing per step: each grid step DMAs exactly one
+    (page_size, D) tile selected by ``pages[b, ki]``.
+    """
+    b, h, one, d = q.shape
+    assert one == 1, q.shape
+    n_pg, page_size, h_kv, dk = k_pool.shape
+    assert v_pool.shape == k_pool.shape and dk == d, (
+        k_pool.shape, v_pool.shape, q.shape)
+    assert h % h_kv == 0, (h, h_kv)
+    groups = h // h_kv
+    p_tab = pages.shape[1]
+    assert pages.shape == (b, p_tab), pages.shape
+    bh = b * h
+    qr = q.reshape(bh, 1, d)
+    pages_i = jnp.maximum(pages.astype(jnp.int32), 0)  # -1 -> page 0, masked
+    lens = lengths.astype(jnp.int32)
+
+    def kv_map(bh_i, ki, pages_ref, len_ref):
+        return (pages_ref[bh_i // h, ki], 0, (bh_i % h) // groups, 0)
+
+    kernel = functools.partial(
+        _flash_decode_paged_kernel, page_size=page_size,
+        n_pages_tab=p_tab, n_heads=h)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(bh, p_tab),
+            in_specs=[
+                pl.BlockSpec((1, 1, d),
+                             lambda bh_i, ki, pages_ref, len_ref:
+                             (bh_i, 0, 0)),
+                pl.BlockSpec((1, page_size, 1, d), kv_map),
+                pl.BlockSpec((1, page_size, 1, d), kv_map),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, d),
+                lambda bh_i, ki, pages_ref, len_ref: (bh_i, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1,), jnp.float32),       # running max m
+                pltpu.VMEM((1,), jnp.float32),       # running sum l
+                pltpu.VMEM((1, d), jnp.float32),     # accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bh, 1, d), q.dtype),
+        interpret=interpret,
+    )(pages_i, lens, qr, k_pool, v_pool)
     return out.reshape(b, h, 1, d)

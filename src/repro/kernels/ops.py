@@ -11,47 +11,108 @@ Both wrappers are TRAINABLE: the underlying entries carry a
 backends. Sequence lengths that are not a multiple of the block/chunk
 size are zero-padded and masked inside the kernels, so every ``configs/``
 shape can take the kernel path.
+
+Autotuned routing (DESIGN.md §15): when a call site leaves the block /
+chunk arguments at ``None`` (the default — all production call sites do),
+the wrapper consults the autotune table for this shape class.  A tuned
+entry supplies block sizes; an entry recording ``backend: "ref"`` (the
+sweep found XLA faster at this shape) routes to the reference path —
+*bitwise identical* to the corresponding model jnp path, so token/loss
+identity is preserved through the reroute.  With no artifact present the
+hard-coded defaults apply unchanged.  Explicit block arguments always
+win (tests pin them).
 """
 from __future__ import annotations
 
 import jax
 
+from . import autotune
 from . import flash_attention as _flash
 from . import flash_decode as _decode
 from . import mamba2_scan as _ssd
+from . import ref as _ref
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _resolve(kind: str, s: int, d: int, dtype, overrides: dict):
+    """Merge explicit call-site arguments over the tuned entry (or the
+    hard-coded defaults).  Returns (cfg, use_ref): ``use_ref`` only when
+    the tuned winner is the reference AND the caller pinned nothing."""
+    explicit = {k: v for k, v in overrides.items() if v is not None}
+    if len(explicit) == len(overrides):
+        return explicit, False
+    entry = autotune.lookup(kind, s, d, dtype)
+    if entry is not None and entry.get("backend") == "ref":
+        if not explicit:
+            return dict(autotune.DEFAULTS[kind]), True
+        entry = None                       # caller pinned a block: honor it
+    base = dict(autotune.DEFAULTS[kind])
+    if entry is not None:
+        base.update({k: entry[k] for k in base if k in entry})
+    base.update(explicit)
+    return base, False
+
+
 def flash_attention(q, k, v, *, causal=True, window=0,
-                    block_q=128, block_k=128):
+                    block_q=None, block_k=None):
     """q/k/v: (B, S, H, D) (model layout) -> (B, S, H, D). Differentiable
     in q, k, v; any sequence length."""
+    cfg, use_ref = _resolve(
+        "flash_attention", q.shape[1], q.shape[3], q.dtype,
+        {"block_q": block_q, "block_k": block_k})
+    if use_ref:
+        # lazy: models.attention imports this module inside functions only
+        from repro.models.attention import full_attention
+        return full_attention(q, k, v, causal=causal, window=window)
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
     out = _flash.flash_attention(qt, kt, vt, causal=causal, window=window,
-                                 block_q=block_q, block_k=block_k,
+                                 block_q=cfg["block_q"],
+                                 block_k=cfg["block_k"],
                                  interpret=_interpret())
     return out.transpose(0, 2, 1, 3)
 
 
-def flash_decode(q, k, v, lengths, *, block_k=128):
+def flash_decode(q, k, v, lengths, *, block_k=None):
     """Single-query decode attention against a linear KV cache.
     q: (B, 1, H, D) (model layout), k/v: (B, S_cache, H, D) with kv heads
     already repeated to H, lengths: (B,) valid-prefix rows.  Not
     differentiable (serving only)."""
+    cfg, use_ref = _resolve("flash_decode", k.shape[1], q.shape[3],
+                            q.dtype, {"block_k": block_k})
+    if use_ref:
+        return _ref.flash_decode_ref(q, k, v, lengths)
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    out = _decode.flash_decode(qt, kt, vt, lengths, block_k=block_k,
+    out = _decode.flash_decode(qt, kt, vt, lengths, block_k=cfg["block_k"],
                                interpret=_interpret())
     return out.transpose(0, 2, 1, 3)
 
 
-def ssd(x, dt, A, Bm, Cm, *, chunk=256):
+def flash_decode_paged(q, k_pool, v_pool, pages, lengths):
+    """Paged decode attention. q: (B, 1, H, D) (model layout);
+    k_pool/v_pool: (N_pages, page_size, H_kv, D) shared pools; pages:
+    (B, P) per-slot page table (-1 = unassigned); lengths: (B,) valid
+    rows.  GQA is resolved inside the kernel's index maps — kv heads are
+    never repeated.  Not differentiable (serving only)."""
+    qt = q.transpose(0, 2, 1, 3)
+    out = _decode.flash_decode_paged(qt, k_pool, v_pool, pages, lengths,
+                                     interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk=None):
     """Mamba2 SSD: x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N).
     Differentiable in all five operands; any sequence length."""
-    return _ssd.ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=_interpret())
+    cfg, use_ref = _resolve("ssd", x.shape[1], x.shape[3], x.dtype,
+                            {"chunk": chunk})
+    if use_ref:
+        from repro.models.ssm import ssd_chunked
+        return ssd_chunked(x, dt, A, Bm, Cm)
+    return _ssd.ssd(x, dt, A, Bm, Cm, chunk=cfg["chunk"],
+                    interpret=_interpret())

@@ -30,6 +30,29 @@ def attention_ref(q, k, v, *, causal=True, window=0):
     return out.astype(q.dtype)
 
 
+def flash_decode_ref(q, k, v, lengths):
+    """Single-query decode attention, XLA path — *model layout*.
+
+    q: (B, 1, H, D); k/v: (B, S_cache, H, D) with kv heads already
+    repeated; lengths: (B,) valid-prefix rows.  This mirrors the masked
+    softmax in ``repro.models.attention.attention_decode`` operation for
+    operation, so when the autotuner routes ``ops.flash_decode`` here the
+    serving path stays BITWISE identical to the non-kernel engine (the
+    token-identity tests rely on that).
+    """
+    b, one, h, d = q.shape
+    s_cache = k.shape[1]
+    scale = d ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(s_cache)[None, :]
+    valid = kpos < lengths[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def ssd_ref(x, dt, A, Bm, Cm):
     """Sequential Mamba2/SSD recurrence (the obviously-correct oracle).
 

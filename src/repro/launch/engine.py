@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.serve import _make_scan_generate
-from repro.models import init_cache, prefill
+from repro.models import init_cache, init_paged_cache, prefill
 
 
 @dataclasses.dataclass
@@ -41,17 +41,58 @@ class Request:
 
 
 class DecodeEngine:
-    """Continuous-batching decode engine over ``n_slots`` fixed slots."""
+    """Continuous-batching decode engine over ``n_slots`` fixed slots.
+
+    ``paged=True`` (DESIGN.md §15) swaps the dense per-slot KV cache for
+    a shared page pool plus per-slot block tables: a slot holds only the
+    pages its request actually occupies, so ``n_slots`` can far exceed
+    what ``n_slots x max_len`` dense rows would allow at the same cache
+    memory.  Admission is bounded by a page *reservation* — a request is
+    admitted only when its worst-case page count (prompt + all decode
+    segments) is available — while physical pages are assigned lazily,
+    one segment ahead of the decode index, and reclaimed the moment the
+    slot frees.  Tokens are bitwise identical to the dense engine."""
 
     def __init__(self, cfg, params, *, n_slots: int = 4, max_len: int = 256,
-                 segment: int = 8, use_kernels: bool = False):
+                 segment: int = 8, use_kernels: bool = False,
+                 paged: bool = False, page_size: int = 16,
+                 n_pages: Optional[int] = None):
         assert not cfg.is_encoder_decoder, \
             "encoder-decoder configs are served via serve.generate"
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_len, self.segment = n_slots, max_len, segment
         self.use_kernels = use_kernels
+        self.paged = paged
 
-        cache = init_cache(cfg, n_slots, max_len)
+        if paged:
+            if not _has_linear_kv(cfg):
+                raise ValueError(
+                    f"paged KV requires a linear-layout KV cache; family "
+                    f"{cfg.family!r} (window {cfg.sliding_window}) has none")
+            if n_pages is None:     # dense-equivalent memory by default
+                n_pages = n_slots * (max_len // page_size)
+            # leaf classification below is by shape: the pool must not
+            # coincide with the dense (n_slots, max_len) allocation
+            assert not (n_pages == n_slots and page_size == max_len), \
+                "degenerate paging (one max_len page per slot)"
+            self.page_size, self.n_pages = page_size, n_pages
+            cache = init_paged_cache(cfg, n_slots, max_len,
+                                     page_size=page_size, n_pages=n_pages)
+            dense_shapes = jax.eval_shape(
+                lambda: init_cache(cfg, n_slots, max_len)["units"])
+            self._is_pool = jax.tree.map(
+                lambda pg, dn: pg.shape != dn.shape,
+                cache["units"], dense_shapes)
+            # host-side paging state
+            self._free_pages: List[int] = list(range(n_pages))
+            self._avail_pages = n_pages          # un-reserved credit
+            self._pages_np = np.full((n_slots, max_len // page_size), -1,
+                                     np.int32)
+            self._slot_npages = np.zeros(n_slots, np.int64)  # assigned
+            self._slot_reserve = np.zeros(n_slots, np.int64)  # total credit
+            self._index_np = np.zeros(n_slots, np.int64)     # decode pos
+        else:
+            cache = init_cache(cfg, n_slots, max_len)
         cache["index"] = jnp.zeros((n_slots,), jnp.int32)  # per-slot position
         self.cache = cache
         self.tok = jnp.zeros((n_slots, 1), jnp.int32)      # next input token
@@ -64,7 +105,13 @@ class DecodeEngine:
         self._next_rid = 0
         self._prefill_fns: Dict[int, Any] = {}
         self._segment_fn = jax.jit(self._make_segment_fn())
-        self.stats = {"segments": 0, "admitted": 0, "wasted_slot_steps": 0}
+        self.stats = {"segments": 0, "admitted": 0, "wasted_slot_steps": 0,
+                      "peak_active_slots": 0}
+        if paged:
+            self.stats.update({
+                "pages_total": n_pages, "pages_in_use": 0,
+                "peak_pages_in_use": 0, "page_occupancy": 0.0,
+                "page_fragmentation": 0.0, "admission_deferred_pages": 0})
 
     # ------------------------------------------------------------------ #
     def submit(self, prompt, max_new_tokens: int = 16) -> int:
@@ -113,20 +160,54 @@ class DecodeEngine:
         return fn
 
     # ------------------------------------------------------------------ #
+    def _pages_needed(self, req: Request) -> int:
+        """Worst-case page count for a request: one row per prompt token
+        plus every position its slot will step through (the slot runs
+        whole segments, so the last partial segment still writes rows)."""
+        segs = -(-req.max_new_tokens // self.segment)
+        rows = req.prompt.shape[0] + segs * self.segment
+        return -(-rows // self.page_size)
+
     def _admit(self) -> None:
         """Fill every free slot from the queue: solo single-shot prefill,
-        then scatter the request's cache rows into the slot."""
+        then scatter the request's cache rows into the slot (dense) or
+        into freshly assigned pool pages (paged).  Paged admission is
+        credit-gated: the request's worst-case page count is reserved up
+        front (FIFO — an oversized head blocks the queue rather than
+        being bypassed), so ``_grow`` can never run out of pages
+        mid-flight."""
         for slot in range(self.n_slots):
             if self.active[slot] or not self.queue:
                 continue
-            req = self.queue.popleft()
-            assert req.prompt.shape[0] <= self.max_len
-            logits, pcache = self._prefill_fn(req.prompt.shape[0])(
+            if self.paged:
+                req = self.queue[0]
+                reserve = self._pages_needed(req)
+                if reserve > self._avail_pages:
+                    self.stats["admission_deferred_pages"] += 1
+                    break
+                self.queue.popleft()
+            else:
+                req = self.queue.popleft()
+            plen = req.prompt.shape[0]
+            assert plen <= self.max_len
+            logits, pcache = self._prefill_fn(plen)(
                 self.params, jnp.asarray(req.prompt)[None, :])
-            self.cache["units"] = _scatter_slot(
-                self.cache["units"], pcache["units"], slot)
-            self.cache["index"] = self.cache["index"].at[slot].set(
-                req.prompt.shape[0])
+            if self.paged:
+                ps = self.page_size
+                self._avail_pages -= reserve
+                self._slot_reserve[slot] = reserve
+                npf = -(-plen // ps)
+                pids = [self._free_pages.pop() for _ in range(npf)]
+                self._pages_np[slot, :] = -1
+                self._pages_np[slot, :npf] = pids
+                self._slot_npages[slot] = npf
+                self._index_np[slot] = plen
+                self.cache["units"] = self._scatter_paged(
+                    pcache["units"], pids, slot)
+            else:
+                self.cache["units"] = _scatter_slot(
+                    self.cache["units"], pcache["units"], slot)
+            self.cache["index"] = self.cache["index"].at[slot].set(plen)
             first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
             self.tok = self.tok.at[slot, 0].set(first)
             self.active[slot] = True
@@ -134,9 +215,56 @@ class DecodeEngine:
             self.slot_rid[slot] = req.rid
             self.stats["admitted"] += 1
 
+    def _scatter_paged(self, punits, pids: List[int], slot: int):
+        """Scatter a solo prefill cache into the paged engine cache: pool
+        leaves take the prompt's rows page by page; per-slot leaves (SSM
+        state, whisper cross K/V) scatter into the slot axis as in the
+        dense engine."""
+        ps = self.page_size
+        npf = len(pids)
+        pids_a = jnp.asarray(pids, jnp.int32)
+
+        def put(dst, src, is_pool):
+            if not is_pool:
+                return _scatter_slot_leaf(dst, src, slot)
+            u = src.shape[0]                   # src: (U, 1, max_len, H, D)
+            rows = src[:, 0, :npf * ps]
+            rows = rows.reshape((u, npf, ps) + src.shape[3:])
+            return dst.at[:, pids_a].set(rows.astype(dst.dtype))
+        return jax.tree.map(put, self.cache["units"], punits, self._is_pool)
+
+    def _grow(self) -> None:
+        """Assign pool pages covering the upcoming segment for every
+        active slot — lazy assignment against the admission reservation,
+        so a slot only ever holds pages for rows it is about to write."""
+        ps = self.page_size
+        for slot in range(self.n_slots):
+            if not self.active[slot]:
+                continue
+            pend = -(-(int(self._index_np[slot]) + self.segment) // ps)
+            while self._slot_npages[slot] < pend:
+                self._pages_np[slot, self._slot_npages[slot]] = \
+                    self._free_pages.pop()
+                self._slot_npages[slot] += 1
+
     def step_segment(self) -> None:
         """One fused scan segment + post-segment bookkeeping/admission."""
         self._admit()
+        if self.paged:
+            self._grow()
+            # one host->device push of the (n_slots, P) block table per
+            # segment covers admissions, growth, and last-segment frees
+            self.cache["pages"] = jnp.asarray(self._pages_np)
+            in_use = int(self._slot_npages.sum())
+            self.stats["pages_in_use"] = in_use
+            self.stats["peak_pages_in_use"] = max(
+                self.stats["peak_pages_in_use"], in_use)
+            rows = int((self._index_np[self.active] + self.segment).sum())
+            occ = rows / (in_use * self.page_size) if in_use else 0.0
+            self.stats["page_occupancy"] = occ
+            self.stats["page_fragmentation"] = 1.0 - occ
+        self.stats["peak_active_slots"] = max(
+            self.stats["peak_active_slots"], int(self.active.sum()))
         toks, self.cache, self.tok = self._segment_fn(
             self.params, self.cache, self.tok)
         toks = np.asarray(toks)                     # (n_slots, segment)
@@ -146,6 +274,8 @@ class DecodeEngine:
         for slot in range(self.n_slots):
             if not self.active[slot]:
                 continue
+            if self.paged:
+                self._index_np[slot] += self.segment
             take = int(min(self.segment, self.remaining[slot]))
             self.outputs[self.slot_rid[slot]].extend(
                 int(t) for t in toks[slot, :take])
@@ -154,6 +284,21 @@ class DecodeEngine:
             if self.remaining[slot] == 0:
                 self.active[slot] = False           # slot freed for reuse
                 self.slot_rid[slot] = -1
+                if self.paged:
+                    self._free_slot_pages(slot)
+
+    def _free_slot_pages(self, slot: int) -> None:
+        """Reclaim a freed slot's pages and reservation.  The block table
+        row is cleared immediately (pushed to the device before the next
+        segment), so the stale slot's continued writes drop instead of
+        corrupting whoever gets the pages next."""
+        npg = int(self._slot_npages[slot])
+        self._free_pages.extend(int(p) for p in self._pages_np[slot, :npg])
+        self._pages_np[slot, :] = -1
+        self._slot_npages[slot] = 0
+        self._avail_pages += int(self._slot_reserve[slot])
+        self._slot_reserve[slot] = 0
+        self._index_np[slot] = 0
 
     def run(self) -> Dict[int, List[int]]:
         """Drain the queue and all active slots; returns {rid: tokens}."""
@@ -173,19 +318,23 @@ def _has_linear_kv(cfg) -> bool:
         cfg.family == "hybrid" and cfg.attn_every > 0)
 
 
-def _scatter_slot(dst_tree, src_tree, slot: int):
-    """Write a batch-1 cache pytree into slot ``slot`` of the engine's
-    batch-``n_slots`` cache.  The slot (batch) axis position varies per
+def _scatter_slot_leaf(dst, src, slot: int):
+    """Write one batch-1 cache leaf into slot ``slot`` of a
+    batch-``n_slots`` leaf.  The slot (batch) axis position varies per
     leaf ((U, B, ...) for KV, (U, u, B, ...) for stacked SSM layers), so
     it is identified as the one axis where the shapes differ."""
-    def put(dst, src):
-        ax = None
-        for i, (a, b) in enumerate(zip(dst.shape, src.shape)):
-            if a != b:
-                ax = i
-                break
-        if ax is None:                  # n_slots == 1: plain replacement
-            return src.astype(dst.dtype)
-        idx = (slice(None),) * ax + (slot,)
-        return dst.at[idx].set(jnp.squeeze(src, axis=ax).astype(dst.dtype))
-    return jax.tree.map(put, dst_tree, src_tree)
+    ax = None
+    for i, (a, b) in enumerate(zip(dst.shape, src.shape)):
+        if a != b:
+            ax = i
+            break
+    if ax is None:                  # n_slots == 1: plain replacement
+        return src.astype(dst.dtype)
+    idx = (slice(None),) * ax + (slot,)
+    return dst.at[idx].set(jnp.squeeze(src, axis=ax).astype(dst.dtype))
+
+
+def _scatter_slot(dst_tree, src_tree, slot: int):
+    """Tree-wide ``_scatter_slot_leaf``."""
+    return jax.tree.map(lambda d, s: _scatter_slot_leaf(d, s, slot),
+                        dst_tree, src_tree)

@@ -244,14 +244,20 @@ def attention_prefill(p, x, cos, sin, cache, *, n_heads, n_kv_heads,
 
 
 def attention_decode(p, x, cos, sin, cache, index, *, n_heads, n_kv_heads,
-                     head_dim, window=0, use_kernel: bool = False
-                     ) -> Tuple[jnp.ndarray, dict]:
+                     head_dim, window=0, use_kernel: bool = False,
+                     pages=None) -> Tuple[jnp.ndarray, dict]:
     """One-token decode. x: (B, 1, D); cache: {"k","v"} (B, S_cache, Hkv, D)
     ring-buffered when ``window > 0`` (S_cache == window), else linear
     (S_cache == max_len). ``index`` is the absolute decode position (B,)
     or scalar.  ``use_kernel=True`` takes the Pallas flash-decode kernel
     for the linear layout (the ring buffer's valid set is not a prefix,
-    so it keeps the jnp path)."""
+    so it keeps the jnp path).
+
+    ``pages`` switches the cache to the PAGED layout (DESIGN.md §15):
+    cache k/v are shared pools ``(N_pages, page_size, Hkv, D)`` and
+    ``pages`` is the per-example block table ``(B, P)`` mapping logical
+    page ``index // page_size`` to a pool page (-1 = unassigned).  Linear
+    layout only (``window == 0``)."""
     b, one, _ = x.shape
     assert one == 1
     q = linear(p["wq"], x).reshape(b, 1, n_heads, head_dim)
@@ -260,6 +266,12 @@ def attention_decode(p, x, cos, sin, cache, index, *, n_heads, n_kv_heads,
     if cos is not None:
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
+    if pages is not None:
+        assert window == 0, "paged KV requires the linear layout"
+        return _attention_decode_paged(
+            p, q, k, v, cache, index, pages, n_heads=n_heads,
+            n_kv_heads=n_kv_heads, head_dim=head_dim,
+            use_kernel=use_kernel, out_dtype=x.dtype)
     s_cache = cache["k"].shape[1]
     index = jnp.asarray(index)
     slot = index % s_cache if window > 0 else index  # ring buffer vs linear
@@ -299,6 +311,68 @@ def attention_decode(p, x, cos, sin, cache, index, *, n_heads, n_kv_heads,
         probs = jax.nn.softmax(scores, axis=-1)
         out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv.astype(jnp.float32))
     out = out.astype(x.dtype).reshape(b, 1, n_heads * head_dim)
+    return linear(p["wo"], out), {"k": ck, "v": cv}
+
+
+def _attention_decode_paged(p, q, k, v, cache, index, pages, *, n_heads,
+                            n_kv_heads, head_dim, use_kernel, out_dtype
+                            ) -> Tuple[jnp.ndarray, dict]:
+    """Paged one-token decode: write this step's K/V row into the pool
+    page that owns position ``index``, then attend over the pages listed
+    in the block table.
+
+    The jnp path gathers the table back into a ``(B, P*page_size, ...)``
+    view — the same shape, row content, and masked-softmax reduction as
+    the dense linear cache (``P * page_size == max_len``), so tokens are
+    BITWISE identical to the dense engine.  The kernel path walks the
+    table inside ``flash_decode_paged`` without materializing the gather.
+
+    Write-safety: an example whose table has no page for ``index`` (an
+    inactive engine slot, or index beyond the table) maps to pool page
+    ``N_pages`` — out of bounds — and the ``mode="drop"`` scatter makes
+    it a no-op.  A plain ``.at[-1]`` would *wrap* and corrupt the last
+    pool page."""
+    b = q.shape[0]
+    n_pg, page_size, _, _ = cache["k"].shape
+    p_tab = pages.shape[1]
+    index = jnp.asarray(index)
+    idx = index if index.ndim > 0 else jnp.broadcast_to(index[None], (b,))
+    pidx = idx // page_size
+    off = idx % page_size
+    ar = jnp.arange(b)
+    pid = jnp.where(pidx < p_tab,
+                    pages[ar, jnp.minimum(pidx, p_tab - 1)], -1)
+    safe = jnp.where(pid >= 0, pid, n_pg)          # unassigned -> OOB drop
+    ck = cache["k"].at[safe, off].set(
+        k[:, 0].astype(cache["k"].dtype), mode="drop")
+    cv = cache["v"].at[safe, off].set(
+        v[:, 0].astype(cache["v"].dtype), mode="drop")
+    # no kv_cache constrain here: the pool layout (N_pages, ...) does not
+    # match the (B, S, H, D) sharding rule, and serving runs single-host
+
+    groups = n_heads // n_kv_heads
+    if use_kernel:
+        from repro.kernels import flash_attention_ops
+        lengths = idx + 1
+        out = flash_attention_ops.flash_decode_paged(
+            q, ck, cv, pages, lengths)
+    else:
+        # gather the table into the dense linear view; unassigned pages
+        # read pool page 0 but every such position is masked below.
+        gpid = jnp.maximum(pages, 0)               # (B, P)
+        gk = ck[gpid].reshape(b, p_tab * page_size, n_kv_heads, head_dim)
+        gv = cv[gpid].reshape(b, p_tab * page_size, n_kv_heads, head_dim)
+        kk = _repeat_kv(gk, groups)
+        vv = _repeat_kv(gv, groups)
+        scale = head_dim ** -0.5
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                            kk.astype(jnp.float32)) * scale
+        kpos = jnp.arange(p_tab * page_size)[None, :]
+        valid = kpos <= idx[:, None]
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv.astype(jnp.float32))
+    out = out.astype(out_dtype).reshape(b, 1, n_heads * head_dim)
     return linear(p["wo"], out), {"k": ck, "v": cv}
 
 

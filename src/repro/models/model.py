@@ -452,6 +452,63 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
     return {"units": units, "index": jnp.zeros((), jnp.int32)}
 
 
+def init_paged_cache(cfg: ArchConfig, batch: int, max_len: int, *,
+                     page_size: int, n_pages: int, dtype=None) -> Any:
+    """Paged decode cache (DESIGN.md §15): every *linear-layout* KV leaf
+    — the ``{"k","v"}`` caches that ``init_cache`` allocates densely as
+    ``(batch, max_len, Hkv, D)`` — becomes a shared pool
+    ``(n_pages, page_size, Hkv, D)`` addressed through one top-level
+    block table ``cache["pages"]: (batch, max_len // page_size) i32``
+    (-1 = unassigned).  One table serves every attention leaf because all
+    of them write the same row position each step.  Non-attention state
+    (SSM, conv, mLSTM) and non-linear layouts (sliding-window rings,
+    whisper cross K/V) keep their dense per-slot allocation — they are
+    O(1) per slot, not O(max_len).
+
+    ``max_len % page_size == 0`` is required: the jnp read path gathers
+    the table into a ``(batch, P * page_size, ...)`` view whose shape
+    must equal the dense cache for bitwise token identity."""
+    assert max_len % page_size == 0, (max_len, page_size)
+    assert cfg.sliding_window == 0, \
+        "paged KV requires the linear cache layout (window == 0)"
+    dt = _dtype(cfg, dtype)
+
+    def paged_kv(h_kv):
+        return {"k": jnp.zeros((n_pages, page_size, h_kv, cfg.head_dim),
+                               dt),
+                "v": jnp.zeros((n_pages, page_size, h_kv, cfg.head_dim),
+                               dt)}
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        unit = paged_kv(cfg.n_kv_heads)
+    elif fam == "moe":
+        unit = {f"sub{i}": paged_kv(cfg.n_kv_heads)
+                for i in range(cfg.pattern_unit())}
+    elif fam == "hybrid":
+        u = cfg.pattern_unit()
+        m = ssm_mod.mamba2_init_cache(
+            batch, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads,
+            cfg.ssm_conv, dt)
+        unit = {"mamba": jax.tree.map(
+            lambda t: jnp.broadcast_to(t, (u,) + t.shape), m),
+            "shared": paged_kv(cfg.n_kv_heads)}
+    elif fam == "audio":
+        cross = {"k": jnp.zeros((batch, cfg.encoder_seq, cfg.n_heads,
+                                 cfg.head_dim), dt),
+                 "v": jnp.zeros((batch, cfg.encoder_seq, cfg.n_heads,
+                                 cfg.head_dim), dt)}
+        unit = {"self": paged_kv(cfg.n_heads), "cross": cross}
+    else:
+        raise ValueError(f"family {fam!r} has no linear KV cache to page")
+
+    units = jax.tree.map(
+        lambda t: jnp.broadcast_to(t, (cfg.n_units,) + t.shape), unit)
+    return {"units": units, "index": jnp.zeros((), jnp.int32),
+            "pages": jnp.full((batch, max_len // page_size), -1,
+                              jnp.int32)}
+
+
 def prefill_cache_whisper(cfg, params, frames, batch, max_len, dtype=None):
     """Whisper: run the encoder once, precompute per-layer cross K/V."""
     cache = init_cache(cfg, batch, max_len, dtype)
@@ -629,8 +686,10 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, *,
             sin = jnp.broadcast_to(sin, (b,) + sin.shape[1:])
 
     shared = params.get("shared_attn")
+    pages = cache.get("pages")        # paged KV block table (B, P) or None
     akw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
-               head_dim=cfg.head_dim, window=win, use_kernel=use_kernels)
+               head_dim=cfg.head_dim, window=win, use_kernel=use_kernels,
+               pages=pages)
 
     def unit_step(x, p, c):
         new_c = c
@@ -702,7 +761,8 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, *,
                 p["attn"], rms_norm(p["ln1"], x, cfg.norm_eps),
                 None, None, c["self"], idx,
                 n_heads=cfg.n_heads, n_kv_heads=cfg.n_heads,
-                head_dim=cfg.head_dim, window=0, use_kernel=use_kernels)
+                head_dim=cfg.head_dim, window=0, use_kernel=use_kernels,
+                pages=pages)
             x = x + h
             xq = rms_norm(p["lnx"], x, cfg.norm_eps)
             h = _cross_decode(p["xattn"], cfg, xq, c["cross"],

@@ -17,6 +17,12 @@ property tests skip via ``tests/_hypothesis_compat.py``.
 """
 import os
 
+# Hermetic kernels: the committed artifacts/bench/autotune.json must not
+# reroute kernel tests through the XLA reference (that would silently
+# drop Pallas coverage) — tests that exercise tuned routing install a
+# table explicitly via autotune.set_table().
+os.environ.setdefault("REPRO_AUTOTUNE", "0")
+
 try:
     from hypothesis import HealthCheck, settings
 except ModuleNotFoundError:   # pragma: no cover - no [test] extra
