@@ -1,0 +1,140 @@
+"""Fault-recovery benchmark (DESIGN.md §16): goodput and JCT inflation
+vs failure rate, SJF-BSBF against SJF.
+
+Failures burn a real share of multi-tenant GPU-hours (Philly: Jeon et
+al. 1901.05758), so a sharing policy must justify itself under churn,
+not just in the fault-free steady state. This benchmark replays one
+trace through SJF and SJF-BSBF at a ladder of failure levels — each a
+seeded :class:`repro.core.FaultModel` with per-job crash processes and
+correlated server kills — and reports, per (policy, level):
+
+* **goodput** — the fraction of GPU iteration-work that survived:
+  ``sum(iters) / (sum(iters) + sum(lost_iters))``. Lost work is what
+  failures rolled back past the last checkpoint.
+* **JCT inflation** — avg JCT at this level over the same policy's
+  fault-free avg JCT (1.0 = failures cost nothing).
+* failure/preemption counts and makespan, for context.
+
+Checkpointing (``checkpoint_interval`` iterations) bounds the rollback;
+the ladder includes a no-checkpoint point so the artifact shows the
+checkpoint interval doing its job.
+
+The fault timeline is precomputed from the model seed alone, so both
+policies face the *same* failure sequence at each level (the scheduler
+changes which jobs are running when the hammer falls — that difference
+is the measurement).
+
+Writes ``artifacts/bench/BENCH_faults.json``.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.fault_recovery            # full
+    PYTHONPATH=src python -m benchmarks.fault_recovery --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import time
+from typing import Dict, List, Optional
+
+from repro.core import (ClusterState, FaultModel, Simulator,
+                        make_scheduler, paper_interference_model)
+from repro.core.trace import datacenter_trace
+
+from .common import save_json
+
+GB = 2 ** 30
+POLICIES = ("sjf", "sjf-bsbf")
+
+# failure ladder: (label, job_mtbf s, server_mtbf s, ckpt interval iters)
+LEVELS = (
+    ("none", 0.0, 0.0, 200.0),
+    ("low", 40_000.0, 200_000.0, 200.0),
+    ("medium", 15_000.0, 80_000.0, 200.0),
+    ("high", 6_000.0, 30_000.0, 200.0),
+    ("high-nockpt", 6_000.0, 30_000.0, 0.0),
+)
+SMOKE_LEVELS = (LEVELS[0], LEVELS[2], LEVELS[4])
+
+
+def _fault_model(job_mtbf: float, server_mtbf: float,
+                 ckpt: float, seed: int) -> Optional[FaultModel]:
+    if job_mtbf <= 0 and server_mtbf <= 0:
+        return None
+    return FaultModel(seed=seed, job_mtbf=job_mtbf,
+                      server_mtbf=server_mtbf, server_repair=600.0,
+                      correlated_servers=2, checkpoint_interval=ckpt)
+
+
+def run_once(policy: str, jobs, *, n_servers: int, gpus_per_server: int,
+             fault_model: Optional[FaultModel]) -> Dict:
+    jobs = copy.deepcopy(jobs)
+    cluster = ClusterState(n_servers=n_servers,
+                           gpus_per_server=gpus_per_server,
+                           gpu_capacity_bytes=11 * GB)
+    sim = Simulator(cluster, jobs, make_scheduler(policy),
+                    interference=paper_interference_model(),
+                    fault_model=fault_model, max_events=20_000_000)
+    t0 = time.time()
+    res = sim.run()
+    useful = sum(j.iters for j in jobs)
+    lost = sum(j.lost_iters for j in jobs)
+    return {
+        "avg_jct": res.avg_jct(),
+        "makespan": res.makespan,
+        "goodput": useful / (useful + lost) if useful + lost else 1.0,
+        "lost_iters": lost,
+        "failures": sum(j.failures for j in jobs),
+        "preemptions": sum(j.preemptions for j in jobs),
+        "fault_events": sum(1 for e in sim.log
+                            if e[1] in ("fail_job", "fail_server")),
+        "wall_seconds": time.time() - t0,
+    }
+
+
+def run(smoke: bool = False, seed: int = 0, verbose: bool = True) -> Dict:
+    n_jobs = 60 if smoke else 240
+    n_servers = 8 if smoke else 16
+    jobs = datacenter_trace(n_jobs=n_jobs, seed=seed,
+                            n_gpus=n_servers * 4)
+    levels = SMOKE_LEVELS if smoke else LEVELS
+
+    rows: List[Dict] = []
+    base_jct: Dict[str, float] = {}
+    for label, job_mtbf, server_mtbf, ckpt in levels:
+        fm = _fault_model(job_mtbf, server_mtbf, ckpt, seed)
+        for policy in POLICIES:
+            row = run_once(policy, jobs, n_servers=n_servers,
+                           gpus_per_server=4, fault_model=fm)
+            row.update(level=label, policy=policy, job_mtbf=job_mtbf,
+                       server_mtbf=server_mtbf, checkpoint_interval=ckpt)
+            if fm is None:
+                base_jct[policy] = row["avg_jct"]
+            row["jct_inflation"] = (row["avg_jct"] / base_jct[policy]
+                                    if base_jct.get(policy) else 1.0)
+            rows.append(row)
+
+    payload = {
+        "smoke": smoke, "seed": seed, "n_jobs": n_jobs,
+        "n_gpus": n_servers * 4, "policies": list(POLICIES),
+        "rows": rows,
+    }
+    path = save_json("BENCH_faults.json", payload)
+    if verbose:
+        print(f"{'level':<12} {'policy':<9} {'goodput':>8} "
+              f"{'JCT x':>7} {'fails':>6} {'lost':>10}")
+        for r in rows:
+            print(f"{r['level']:<12} {r['policy']:<9} "
+                  f"{r['goodput']:>8.4f} {r['jct_inflation']:>7.3f} "
+                  f"{r['failures']:>6d} {r['lost_iters']:>10.0f}")
+        print(f"wrote {path}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace / fewer levels for CI")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, seed=args.seed)

@@ -1,3 +1,5 @@
-from .npz import load_pytree, restore, save, save_pytree
+from .npz import (CheckpointError, load_pytree, restore, save,
+                  save_pytree)
 
-__all__ = ["load_pytree", "restore", "save", "save_pytree"]
+__all__ = ["CheckpointError", "load_pytree", "restore", "save",
+           "save_pytree"]

@@ -1,14 +1,32 @@
 """Minimal npz pytree checkpointing: flatten with '/'-joined key paths,
-save atomically, restore into the same tree structure."""
+save atomically (tmp file + fsync + rename), restore into the same tree
+structure. A corrupted or truncated file raises :class:`CheckpointError`
+with the path and cause, never a raw ``zipfile`` traceback — the
+executor's recovery path (DESIGN.md §16) decides whether to fall back to
+an older checkpoint or restart from scratch."""
 from __future__ import annotations
 
 import os
 import tempfile
+import zipfile
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+__all__ = ["CheckpointError", "load_pytree", "restore", "save",
+           "save_pytree"]
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint file is unreadable (corrupted, truncated, or not an
+    npz archive). Carries ``path`` so recovery code can report which
+    file is damaged."""
+
+    def __init__(self, path: str, reason: str) -> None:
+        self.path = path
+        super().__init__(f"checkpoint {path!r} is unreadable: {reason}")
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -30,6 +48,14 @@ def save_pytree(path: str, tree) -> None:
     os.close(fd)
     try:
         np.savez(tmp, **flat)
+        # fsync before rename: os.replace is atomic on the directory
+        # entry, but a crash between write and flush could otherwise
+        # publish a truncated file under the final name
+        fd = os.open(tmp, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
         os.replace(tmp, path)
     finally:
         if os.path.exists(tmp):
@@ -37,9 +63,18 @@ def save_pytree(path: str, tree) -> None:
 
 
 def load_pytree(path: str, like) -> Any:
-    """Restore into the structure of ``like`` (a template pytree)."""
-    with np.load(path) as data:
-        flat = {k: data[k] for k in data.files}
+    """Restore into the structure of ``like`` (a template pytree).
+
+    Raises :class:`FileNotFoundError` if ``path`` does not exist and
+    :class:`CheckpointError` if it exists but cannot be parsed.
+    """
+    if not os.path.exists(path):
+        raise FileNotFoundError(path)
+    try:
+        with np.load(path) as data:
+            flat = {k: data[k] for k in data.files}
+    except (zipfile.BadZipFile, ValueError, EOFError, OSError) as exc:
+        raise CheckpointError(path, f"{type(exc).__name__}: {exc}") from exc
     leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
     for path_keys, leaf in leaves_like:

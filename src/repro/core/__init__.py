@@ -7,6 +7,7 @@ from .calibration import (CALIBRATION_VERSION, MeasuredTaskProfile,
                           load_artifact, perf_params_from_artifact,
                           profiles_from_artifact, run_calibration,
                           save_artifact)
+from .faults import FaultModel
 from .interference import (InterferenceModel, paper_interference_model,
                            structural_xi)
 from .job import ClusterState, Job, JobState
@@ -38,7 +39,7 @@ from .trace import (TraceConfig, calibrated_trace, datacenter_trace,
 __all__ = [
     "ALL_POLICIES", "CALIBRATION_VERSION", "ClusterState",
     "DonorScaledConfig",
-    "ENGINES", "FIFO", "GPU_2080TI",
+    "ENGINES", "FIFO", "FaultModel", "GPU_2080TI",
     "HardwareSpec", "HeapEngine", "InterferenceModel", "Job", "JobState",
     "MeasuredTaskProfile", "PAPER_TASK_PROFILES",
     "PairDecision", "PairJob", "PerfParams", "PolluxLike", "SJF", "SJF_BSBF", "SRSF",

@@ -41,6 +41,7 @@ import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..util.errors import ArtifactVersionError
 from .perf_model import GPU_2080TI, HardwareSpec, PerfParams, fit_comp_params
 
 CALIBRATION_VERSION = 1
@@ -64,9 +65,10 @@ def load_artifact(path: str) -> Dict:
         payload = json.load(f)
     version = payload.get("version")
     if version != CALIBRATION_VERSION:
-        raise ValueError(
-            f"unsupported calibration artifact version {version!r} "
-            f"(expected {CALIBRATION_VERSION})")
+        raise ArtifactVersionError(path, version, CALIBRATION_VERSION,
+                                   kind="calibration artifact",
+                                   detail="re-run benchmarks/calibrate.py "
+                                          "to regenerate")
     return payload
 
 

@@ -108,6 +108,17 @@ class EngineBase:
         # DESIGN.md §13: restore co-tenants' sub-batches when a sharer
         # departs (opt-in; default keeps the seed semantics bit-exact)
         self.reconfig_on_release = getattr(sim, "reconfig_on_release", False)
+        # DESIGN.md §16: fault injection. The timeline is precomputed by
+        # the Simulator from the FaultModel seed alone, so every engine
+        # and decision path replays the identical fault sequence; an
+        # empty timeline leaves the event loop bit-identical to a run
+        # with no fault model. Dynamic events (a chaos scheduler's
+        # fail_server with a repair time) push into the same heap.
+        self.fault_model = getattr(sim, "fault_model", None)
+        self._fault_heap: List[tuple] = list(
+            getattr(sim, "fault_events", ()) or ())
+        heapq.heapify(self._fault_heap)
+        self._fault_seq = len(self._fault_heap)
 
         self.time = 0.0
         self.pending: List[Job] = []
@@ -230,6 +241,109 @@ class EngineBase:
                         if b != tenant.sub_batch:
                             self.reconfigure_job(tenant, b)
                         break
+
+    # ------------------------------------------------------------------ #
+    # Fault events (DESIGN.md §16)
+    # ------------------------------------------------------------------ #
+    def fail_job(self, job: Job) -> None:
+        """An injected fault kills the running ``job``: its progress is
+        settled, then **rounded down to the last checkpoint boundary**
+        (``FaultModel.checkpoint_interval``; no fault model / interval 0
+        restarts the attempt from scratch), the lost work accounted in
+        ``job.lost_iters``, and the job re-queued — it pays the restart
+        penalty on its next start like a preempted job. Surviving
+        co-tenants of its GPUs are gracefully rescaled to the largest
+        sub-batch that fits again (``FaultModel.rescale_peers``) via the
+        reconfig machinery instead of being killed."""
+        if job.state != JobState.RUNNING:
+            raise RuntimeError(f"job {job.jid} not running")
+        self._accrue(job, self.time)
+        fm = self.fault_model
+        kept = fm.truncate_progress(job.iters_done) if fm is not None \
+            else 0.0
+        job.lost_iters += job.iters_done - kept
+        job.iters_done = kept
+        job.failures += 1
+        self._on_preempt(job)
+        self.cluster.release(job.jid, job.placement)
+        released = job.placement
+        job.placement = frozenset()
+        job.state = JobState.PENDING
+        job.preemptions += 1            # requeue invalidates sort keys
+        job.current_rate = 0.0
+        self.preemptions_total += 1
+        fl = self.cluster._flat
+        if fl is not None:
+            fl.note_rate(job)
+            fl.note_progress(job)
+        del self.running[job.jid]
+        self._blocked_until.pop(job.jid, None)
+        self.pending.append(job)
+        self._on_requeued(job)
+        self.log.append((self.time, "fail_job", job.jid))
+        if fm is None or fm.rescale_peers:
+            self._restore_tenants(released)
+
+    def fail_server(self, sid: int,
+                    repair_after: Optional[float] = None) -> bool:
+        """A server dies: every job holding one of its GPUs fails (in
+        jid order, each via :meth:`fail_job`), then the server's GPUs
+        leave the allocatable pool until the matching recover event.
+        ``repair_after`` schedules that recovery onto the fault heap —
+        callers injecting failures dynamically (the chaos harness) use
+        it so the event loop knows capacity is coming back and does not
+        mistake the lull for a deadlock. Returns False (and does
+        nothing) if the server is already down."""
+        cluster = self.cluster
+        if sid < 0 or sid >= cluster.n_servers:
+            raise ValueError(f"no server {sid}")
+        if sid in cluster.down_servers:
+            return False
+        victims = sorted({jid for g in cluster.server_gpus(sid)
+                          for jid in cluster.occupancy[g]})
+        for jid in victims:
+            self.fail_job(self.jobs[jid])
+        cluster.set_server_down(sid)
+        self.log.append((self.time, "fail_server", sid))
+        if repair_after is not None:
+            self._fault_seq = seq = self._fault_seq + 1
+            heapq.heappush(self._fault_heap,
+                           (self.time + repair_after, seq,
+                            "recover_server", sid))
+        return True
+
+    def recover_server(self, sid: int) -> bool:
+        """A failed server returns; its GPUs rejoin the free pool (the
+        scheduling pass that follows may place onto them immediately).
+        Already-recovered servers no-op (correlated kill timelines can
+        carry overlapping repair windows; the earliest recover wins)."""
+        if sid not in self.cluster.down_servers:
+            return False
+        self.cluster.set_server_up(sid)
+        self.log.append((self.time, "recover_server", sid))
+        return True
+
+    def _next_fault_time(self) -> float:
+        return self._fault_heap[0][0] if self._fault_heap else math.inf
+
+    def _process_faults(self, now: float) -> None:
+        """Apply every fault event due at ``now``. Events targeting a
+        job that is not running, or a server already in the target
+        state, are consumed silently — the timeline is precomputed, the
+        cluster state is not."""
+        fh = self._fault_heap
+        while fh and fh[0][0] <= now + _EPS:
+            _t, _seq, kind, target = heapq.heappop(fh)
+            if kind == "fail_job":
+                job = self.jobs.get(target)
+                if job is not None and job.state is JobState.RUNNING:
+                    self.fail_job(job)
+            elif kind == "fail_server":
+                self.fail_server(target)
+            elif kind == "recover_server":
+                self.recover_server(target)
+            else:   # pragma: no cover - timeline is engine-generated
+                raise ValueError(f"unknown fault event kind {kind!r}")
 
     # Engine-specific bookkeeping hooks -------------------------------- #
     def _drop_pending(self, job: Job) -> None:
@@ -383,6 +497,10 @@ class ScanEngine(EngineBase):
                 candidates.append(self._predicted_finish(job))
             if self._next_tick is not None:
                 candidates.append(self._next_tick)
+            if self._fault_heap:
+                # A pending recover event is a real future event: jobs
+                # may be stuck pending purely because servers are down.
+                candidates.append(self._fault_heap[0][0])
             if not candidates:
                 raise RuntimeError(
                     f"deadlock: {len(self.pending)} pending jobs, none "
@@ -414,6 +532,9 @@ class ScanEngine(EngineBase):
                     self.log.append((self.time, "finish", job.jid))
                     if self.reconfig_on_release:
                         self._restore_tenants(released)
+
+            # -- faults ------------------------------------------------
+            self._process_faults(self.time)
 
             # -- arrivals ----------------------------------------------
             while (self._arrival_idx < len(self.arrivals)
@@ -603,6 +724,10 @@ class HeapEngine(EngineBase):
                     t_next = t_arr
             if self._next_tick is not None and self._next_tick < t_next:
                 t_next = self._next_tick
+            if self._fault_heap and self._fault_heap[0][0] < t_next:
+                # pending fault/recover events are real future events
+                # (a recover may be the only thing unblocking the queue)
+                t_next = self._fault_heap[0][0]
             if t_next == inf:
                 raise RuntimeError(
                     f"deadlock: {len(pending)} pending jobs, none "
@@ -640,6 +765,9 @@ class HeapEngine(EngineBase):
                 self.log.append((now, "finish", jid))
                 if self.reconfig_on_release:
                     self._restore_tenants(released)
+
+            # -- faults ------------------------------------------------
+            self._process_faults(now)
 
             # -- arrivals ----------------------------------------------
             idx = self._arrival_idx

@@ -45,6 +45,8 @@ class Job:
     last_progress_at: float = 0.0
     current_rate: float = 0.0   # iterations / second right now
     preemptions: int = 0
+    failures: int = 0           # injected faults that killed an attempt
+    lost_iters: float = 0.0     # work rolled back to the last checkpoint
     attained_service: float = 0.0   # gpus * seconds (Tiresias)
     alloc_gpus: Optional[int] = None  # elastic allocation (Pollux-like only)
     waiting_time: float = 0.0       # total time not holding GPUs (queue + preempted)
@@ -182,6 +184,10 @@ class ClusterState:
     # optional repro.core.pass_batch.FlatJobs attachment: when present,
     # donor-membership transitions are pushed into its flat donor index
     _flat: object = field(default=None, repr=False, compare=False)
+    # servers currently failed (DESIGN.md §16): their GPUs are out of the
+    # free pool until the matching recover event
+    _down_servers: Set[int] = field(
+        default_factory=set, repr=False, compare=False)
 
     def __post_init__(self) -> None:
         for g in range(self.n_gpus):
@@ -406,6 +412,45 @@ class ClusterState:
                 dcount[surv] = count = dcount.get(surv, 0) + 1
                 if flat is not None:
                     flat.set_donor_singles(surv, count)
+        self._version += 1
+
+    # -- failure-aware availability (DESIGN.md §16) --------------------- #
+    @property
+    def down_servers(self) -> Set[int]:
+        """Servers currently failed. Read-only live view."""
+        return self._down_servers
+
+    def server_gpus(self, sid: int) -> range:
+        lo = sid * self.gpus_per_server
+        return range(lo, lo + self.gpus_per_server)
+
+    def set_server_down(self, sid: int) -> None:
+        """Remove a (fully vacated) server's GPUs from the allocatable
+        pool. Callers must have released every tenant first — the
+        engine fails resident jobs before downing the server."""
+        if sid in self._down_servers:
+            raise RuntimeError(f"server {sid} already down")
+        for g in self.server_gpus(sid):
+            if self.occupancy[g]:
+                raise RuntimeError(
+                    f"cannot down server {sid}: GPU {g} still holds "
+                    f"{self.occupancy[g]}")
+            self._free.discard(g)
+        self._free_by_server[sid].clear()
+        self._free_count[sid] = 0
+        self._down_servers.add(sid)
+        self._version += 1
+
+    def set_server_up(self, sid: int) -> None:
+        """Return a recovered server's GPUs to the free pool."""
+        if sid not in self._down_servers:
+            raise RuntimeError(f"server {sid} is not down")
+        self._down_servers.discard(sid)
+        fbs = self._free_by_server[sid]
+        for g in self.server_gpus(sid):
+            self._free.add(g)
+            fbs.add(g)
+        self._free_count[sid] = self.gpus_per_server
         self._version += 1
 
     def co_runners(self, job: Job) -> Set[int]:

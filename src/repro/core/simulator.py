@@ -18,6 +18,7 @@ import os
 from typing import Dict, List, Optional, Sequence
 
 from .engine import ENGINES, SimResults, make_engine
+from .faults import FaultModel
 from .interference import InterferenceModel
 from .job import ClusterState, Job
 
@@ -42,6 +43,7 @@ class Simulator:
         engine: Optional[str] = None,
         decision: Optional[str] = None,
         reconfig_on_release: bool = False,
+        fault_model: Optional["FaultModel"] = None,
     ) -> None:
         self.cluster = cluster
         self.jobs: Dict[int, Job] = {j.jid: j for j in jobs}
@@ -50,6 +52,13 @@ class Simulator:
         self.interference = interference or InterferenceModel()
         self.restart_penalty = restart_penalty
         self.max_events = max_events
+        # DESIGN.md §16: the fault timeline is precomputed here, from
+        # the model's seed alone, so every engine and decision path
+        # replays the identical fault sequence.
+        self.fault_model = fault_model
+        self.fault_events = (
+            fault_model.timeline(cluster.n_servers, sorted(self.jobs))
+            if fault_model is not None else [])
         # DESIGN.md §13: when a sharer departs, surviving co-tenants are
         # restored to the largest sub-batch that fits again (a mid-run
         # reconfiguration, logged as a "reconfig" event). Default off —
@@ -107,6 +116,19 @@ class Simulator:
 
     def reconfigure_job(self, job: Job, sub_batch: int) -> None:
         self.engine.reconfigure_job(job, sub_batch)
+
+    def fail_job(self, job: Job) -> None:
+        """Inject a failure into a running job (DESIGN.md §16): its
+        progress truncates to the last checkpoint, it re-queues, and
+        surviving sharing peers are rescaled."""
+        self.engine.fail_job(job)
+
+    def fail_server(self, sid: int,
+                    repair_after: Optional[float] = None) -> bool:
+        return self.engine.fail_server(sid, repair_after=repair_after)
+
+    def recover_server(self, sid: int) -> bool:
+        return self.engine.recover_server(sid)
 
     def effective_t_iter(self, job: Job) -> float:
         return self.engine.effective_t_iter(job)

@@ -44,6 +44,8 @@ import os
 import time
 from typing import Dict, List, Optional, Tuple
 
+from ..util.errors import ArtifactVersionError
+
 AUTOTUNE_VERSION = 1
 DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                             "artifacts", "bench", "autotune.json")
@@ -88,12 +90,15 @@ def save_artifact(payload: Dict, path: Optional[str] = None) -> str:
 
 
 def load_artifact(path: Optional[str] = None) -> Dict:
-    with open(path or DEFAULT_PATH) as f:
+    path = path or DEFAULT_PATH
+    with open(path) as f:
         payload = json.load(f)
     version = payload.get("version")
     if version != AUTOTUNE_VERSION:
-        raise ValueError(f"unsupported autotune artifact version {version!r} "
-                         f"(expected {AUTOTUNE_VERSION})")
+        raise ArtifactVersionError(path, version, AUTOTUNE_VERSION,
+                                   kind="autotune artifact",
+                                   detail="re-run benchmarks/autotune.py "
+                                          "to regenerate")
     return payload
 
 
@@ -101,9 +106,22 @@ class AutotuneTable:
     """In-memory view of the artifact, consulted by :mod:`ops`."""
 
     def __init__(self, payload: Dict):
-        if payload.get("version") != AUTOTUNE_VERSION:
-            raise ValueError(f"unsupported autotune artifact version "
-                             f"{payload.get('version')!r}")
+        version = payload.get("version")
+        if version != AUTOTUNE_VERSION:
+            raise ArtifactVersionError("<payload>", version,
+                                       AUTOTUNE_VERSION,
+                                       kind="autotune artifact")
+        for field in ("entries", "meta"):
+            if field not in payload:
+                raise ArtifactVersionError(
+                    "<payload>", version, AUTOTUNE_VERSION,
+                    kind="autotune artifact",
+                    detail=f"schema missing {field!r}")
+        if "backend" not in payload["meta"]:
+            raise ArtifactVersionError(
+                "<payload>", version, AUTOTUNE_VERSION,
+                kind="autotune artifact",
+                detail="schema missing meta['backend']")
         self.payload = payload
         self.entries: Dict[str, Dict] = payload["entries"]
         self.backend: str = payload["meta"]["backend"]

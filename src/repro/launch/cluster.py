@@ -37,6 +37,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
+import queue
+import random
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
@@ -44,10 +48,73 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import checkpoint as _ckpt
 from repro.configs.base import ArchConfig
 from repro.data import make_batch
 from repro.models import init_params
 from repro.train import TrainConfig, adamw_init, make_train_step
+from repro.util.retry import RetryPolicy, retry_call
+
+
+# ---------------------------------------------------------------------- #
+# Fault injection (DESIGN.md §16)
+# ---------------------------------------------------------------------- #
+class TransientFault(RuntimeError):
+    """A recoverable step failure (the physical analogue of an ECC blip
+    or a flaky interconnect): the executor retries the fused call with
+    backoff. Raised by fault injectors *before* the program call —
+    donated buffers are still intact, so the retry replays the exact
+    same step."""
+
+    def __init__(self, job: str, msg: str = "") -> None:
+        self.job = job
+        super().__init__(msg or f"transient fault on job {job!r}")
+
+
+class FatalFault(RuntimeError):
+    """An unrecoverable member failure (OOM-killed worker, dead host):
+    not retried — the member drops from its group, survivors re-fuse,
+    and the job restarts later from its last checkpoint."""
+
+    def __init__(self, job: str, msg: str = "") -> None:
+        self.job = job
+        super().__init__(msg or f"fatal fault on job {job!r}")
+
+
+@dataclass
+class FaultSpec:
+    """One scripted fault: fires when the executor's fused-call counter
+    reaches ``call`` and ``job`` is a member of that call. ``times`` is
+    the number of consecutive attempts it poisons — a transient spec
+    with ``times < retry attempts`` is survived by the retry loop, one
+    with ``times >= attempts`` exhausts it (and escalates to a drop)."""
+
+    call: int
+    job: str
+    kind: str = "transient"     # "transient" | "fatal"
+    times: int = 1
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("transient", "fatal"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+class ScriptedFaults:
+    """Deterministic fault injector for the executor: a list of
+    :class:`FaultSpec` consulted before every fused call. Scripted
+    faults make recovery testable — the same script replays the same
+    failure sequence bit-exactly."""
+
+    def __init__(self, specs: Sequence[FaultSpec]) -> None:
+        self._remaining = [(s, [s.times]) for s in specs]
+
+    def check(self, call: int, names: Sequence[str]) -> None:
+        for spec, rem in self._remaining:
+            if spec.call == call and spec.job in names and rem[0] > 0:
+                rem[0] -= 1
+                if spec.kind == "fatal":
+                    raise FatalFault(spec.job)
+                raise TransientFault(spec.job)
 
 
 # ---------------------------------------------------------------------- #
@@ -125,6 +192,10 @@ class JobRun:
     walltime: float = 0.0       # attributed execution seconds
     started: bool = False
     finished: bool = False
+    failed: bool = False        # dropped by a fault; restart() clears
+    restarts: int = 0
+    retries: int = 0            # transient faults absorbed by backoff
+    last_ckpt_step: int = -1    # steps_done at the last checkpoint
     reconfigs: List[Tuple[int, int]] = field(default_factory=list)
     last_metrics: Any = field(default=None, repr=False)
 
@@ -135,6 +206,9 @@ class JobRun:
             "sub_batch": self.sub_batch,
             "accum_steps": self.accum_steps,
             "reconfigs": list(self.reconfigs),
+            "failed": self.failed,
+            "restarts": self.restarts,
+            "retries": self.retries,
         }
         if self.last_metrics is not None:
             out["loss"] = float(self.last_metrics["loss"])
@@ -181,13 +255,34 @@ class ScheduleExecutor:
     bundle; fused programs are then traced and run under its activation
     partitioning context (a no-op on a single-device host)."""
 
-    def __init__(self, *, donate: bool = True, rules=None) -> None:
+    def __init__(self, *, donate: bool = True, rules=None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0,
+                 fault_injector: Optional[ScriptedFaults] = None,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 retry_seed: int = 0,
+                 sleep=time.sleep) -> None:
         self.runs: Dict[str, JobRun] = {}
         self.rules = rules
         self.donate = donate
         self._programs: Dict[tuple, Any] = {}
         self.compiles = 0
         self.calls = 0
+        # fault tolerance (DESIGN.md §16): periodic async checkpoints,
+        # bounded-backoff retry of transient step faults, and a degrade
+        # path dropping fatally-failed members from their fused group
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = int(checkpoint_every)
+        self.fault_injector = fault_injector
+        self.retry_policy = retry_policy or RetryPolicy()
+        self._retry_rng = random.Random(retry_seed)
+        self._sleep = sleep
+        self.retries_total = 0
+        self.drops_total = 0
+        self.checkpoints_written = 0
+        self._ckpt_queue: Optional[queue.Queue] = None
+        self._ckpt_thread: Optional[threading.Thread] = None
+        self._ckpt_errors: List[BaseException] = []
 
     # -- job lifecycle ------------------------------------------------- #
     def submit(self, name: str, spec: JobSpec, steps: int) -> JobRun:
@@ -281,27 +376,137 @@ class ScheduleExecutor:
             args += [r.params, r.opt, r.batch]
         return tuple(args)
 
+    # -- checkpoint / restart (DESIGN.md §16) -------------------------- #
+    def _ckpt_path(self, name: str) -> str:
+        assert self.checkpoint_dir is not None
+        return os.path.join(self.checkpoint_dir, f"{name}.npz")
+
+    def _ckpt_worker(self) -> None:
+        q = self._ckpt_queue
+        while True:
+            item = q.get()
+            if item is None:
+                q.task_done()
+                return
+            path, tree = item
+            try:
+                _ckpt.save_pytree(path, tree)
+                self.checkpoints_written += 1
+            except BaseException as exc:   # surfaced at the next flush
+                self._ckpt_errors.append(exc)
+            finally:
+                q.task_done()
+
+    def checkpoint(self, name: str) -> str:
+        """Snapshot ``name``'s params/opt/step to its checkpoint file.
+        The device->host copy happens here (so later donated-buffer
+        rebinds cannot corrupt it); the npz write runs on a background
+        worker thread — training does not stall on disk. The write
+        itself is atomic (tmp + fsync + rename, ``repro.checkpoint``)."""
+        if self.checkpoint_dir is None:
+            raise RuntimeError("executor has no checkpoint_dir")
+        run = self.runs[name]
+        if not run.started:
+            raise RuntimeError(f"job {name!r} not started")
+        tree = {"params": run.params, "step": jnp.asarray(run.steps_done)}
+        if run.opt is not None:
+            tree["opt"] = run.opt
+        snap = jax.device_get(tree)
+        if self._ckpt_queue is None:
+            self._ckpt_queue = queue.Queue()
+            self._ckpt_thread = threading.Thread(
+                target=self._ckpt_worker, daemon=True)
+            self._ckpt_thread.start()
+        path = self._ckpt_path(name)
+        self._ckpt_queue.put((path, snap))
+        run.last_ckpt_step = run.steps_done
+        return path
+
+    def flush_checkpoints(self) -> None:
+        """Block until every queued checkpoint write has landed; re-raise
+        the first background write error, if any."""
+        if self._ckpt_queue is not None:
+            self._ckpt_queue.join()
+        if self._ckpt_errors:
+            raise self._ckpt_errors[0]
+
+    def restart(self, name: str) -> JobRun:
+        """Recover a failed (or stopped) job: pending checkpoint writes
+        are flushed, then params/opt/step restore from the job's last
+        checkpoint — or from a fresh init when it never checkpointed.
+        The training data stream is a fixed per-job batch, so a restart
+        replays the remaining steps bit-exactly (test-pinned)."""
+        run = self.runs[name]
+        if not run.started:
+            raise RuntimeError(f"job {name!r} not started")
+        self.flush_checkpoints()
+        params, opt, batch = _make_state(run.spec)
+        path = (self._ckpt_path(name)
+                if self.checkpoint_dir is not None else None)
+        if path is not None and os.path.exists(path):
+            params, opt, step = _ckpt.restore(
+                path, params_like=params, opt_like=opt)
+            run.steps_done = int(step)
+        else:
+            run.steps_done = 0
+        run.params, run.opt, run.batch = params, opt, batch
+        run.failed = False
+        run.restarts += 1
+        return run
+
     # -- execution ----------------------------------------------------- #
     def step_group(self, names: Sequence[str]) -> Dict[str, Any]:
         """One fused call advancing every named job one step. Returns the
         call's walltime (compile excluded — programs are AOT-compiled on
-        first use) and per-job losses."""
+        first use) and per-job losses.
+
+        Fault path: the injector (if any) is consulted *before* the
+        program call — donation means a completed call has already
+        consumed the input buffers, so faults must strike pre-call for a
+        retry to be possible. Transient faults retry with bounded
+        backoff; a fatal fault (or an exhausted retry budget) marks the
+        faulting member ``failed`` and returns ``{"dropped": name}`` —
+        the caller drops it and keeps stepping the survivors (the next
+        fused call re-fuses automatically: programs are cached by group
+        composition)."""
         runs = [self.runs[n] for n in names]
         for r in runs:
-            if not r.started or r.finished:
+            if not r.started or r.finished or r.failed:
                 raise RuntimeError(f"job {r.name!r} not running")
         prog = self._program(runs)
-        args = self._flat_args(runs)
-        with self._ctx():
-            t0 = time.perf_counter()
-            out = prog(*args)
-            jax.block_until_ready(out)
-            dt = time.perf_counter() - t0
+
+        def attempt():
+            if self.fault_injector is not None:
+                self.fault_injector.check(self.calls, names)
+            args = self._flat_args(runs)
+            with self._ctx():
+                t0 = time.perf_counter()
+                out = prog(*args)
+                jax.block_until_ready(out)
+                return out, time.perf_counter() - t0
+
+        def note_retry(attempt_i, exc, delay):
+            self.retries_total += 1
+            self.runs[exc.job].retries += 1
+
+        try:
+            out, dt = retry_call(attempt, policy=self.retry_policy,
+                                 retry_on=(TransientFault,),
+                                 rng=self._retry_rng, sleep=self._sleep,
+                                 on_retry=note_retry)
+        except (TransientFault, FatalFault) as exc:
+            run = self.runs[exc.job]
+            run.failed = True
+            self.drops_total += 1
+            return {"walltime": 0.0, "losses": {}, "dropped": exc.job}
         losses = {}
         for i, r in enumerate(runs):
             r.params, r.opt, r.last_metrics = out[3 * i:3 * i + 3]
             r.steps_done += 1
             losses[r.name] = float(r.last_metrics["loss"])
+            if (self.checkpoint_dir is not None and self.checkpoint_every
+                    and r.steps_done % self.checkpoint_every == 0):
+                self.checkpoint(r.name)
         self.calls += 1
         return {"walltime": dt, "losses": losses}
 
@@ -329,18 +534,26 @@ class ScheduleExecutor:
             quotas = dict(phase.quotas)
             for group in phase.groups:
                 left = {n: quotas.get(n, 0) for n in group
-                        if quotas.get(n, 0) > 0}
+                        if quotas.get(n, 0) > 0 and not self.runs[n].failed}
                 t_group = 0.0
                 while left:
                     members = sorted(left)
-                    t_group += self.step_group(members)["walltime"]
+                    res = self.step_group(members)
+                    dropped = res.get("dropped")
+                    if dropped is not None:
+                        # degraded mode: the failed member leaves, the
+                        # survivors keep their quotas (the next call
+                        # re-fuses the smaller group from the cache)
+                        del left[dropped]
+                        continue
+                    t_group += res["walltime"]
                     for n in members:
                         left[n] -= 1
                         if left[n] == 0:
                             del left[n]
                 for n in group:
                     run = self.runs[n]
-                    if run.started and not run.finished:
+                    if run.started and not run.finished and not run.failed:
                         run.walltime += t_group
         report = {name: run.report() for name, run in self.runs.items()}
         if isinstance(plan, SchedulePlan):
@@ -474,9 +687,11 @@ def plan_from_sim(log: Sequence[tuple], jobs: Mapping[int, Any],
                 sub_batch[jid] = int(entry[3])
                 ops.append(PlanOp("reconfig", name_of(jid),
                                   sub_batch=int(entry[3])))
-            elif kind == "preempt":
+            elif kind in ("preempt", "fail_job", "fail_server",
+                          "recover_server"):
                 raise ValueError(
-                    "plan_from_sim only replays non-preemptive schedules")
+                    "plan_from_sim only replays non-preemptive, "
+                    f"fault-free schedules (saw {kind!r})")
         # accrue simulated progress until the next event
         dt = (times[k + 1] - t) if k + 1 < len(times) else 0.0
         quotas: List[Tuple[str, int]] = []

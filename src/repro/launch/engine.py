@@ -22,6 +22,8 @@ request would carry its own encoder pass; use ``serve.generate``).
 from __future__ import annotations
 
 import dataclasses
+import random
+import time
 from collections import deque
 from typing import Any, Dict, List, Optional
 
@@ -29,8 +31,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch.cluster import ScriptedFaults, TransientFault
 from repro.launch.serve import _make_scan_generate
 from repro.models import init_cache, init_paged_cache, prefill
+from repro.util.retry import RetryPolicy, retry_call
 
 
 @dataclasses.dataclass
@@ -38,6 +42,9 @@ class Request:
     rid: int
     prompt: np.ndarray            # (plen,) i32
     max_new_tokens: int
+    deadline: Optional[float] = None   # absolute clock time; None = none
+    priority: int = 0                  # higher = more important
+    submitted_at: float = 0.0
 
 
 class DecodeEngine:
@@ -56,7 +63,13 @@ class DecodeEngine:
     def __init__(self, cfg, params, *, n_slots: int = 4, max_len: int = 256,
                  segment: int = 8, use_kernels: bool = False,
                  paged: bool = False, page_size: int = 16,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 clock=time.monotonic,
+                 brownout_depth: int = 0,
+                 fault_injector: Optional[ScriptedFaults] = None,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 retry_seed: int = 0,
+                 sleep=time.sleep):
         assert not cfg.is_encoder_decoder, \
             "encoder-decoder configs are served via serve.generate"
         self.cfg, self.params = cfg, params
@@ -105,8 +118,22 @@ class DecodeEngine:
         self._next_rid = 0
         self._prefill_fns: Dict[int, Any] = {}
         self._segment_fn = jax.jit(self._make_segment_fn())
+        # degraded-mode serving (DESIGN.md §16): per-request deadlines
+        # with timeout-shedding, admission brown-out under overload, and
+        # bounded retry of transient segment faults. All off by default.
+        self._clock = clock
+        self.brownout_depth = int(brownout_depth)
+        self.fault_injector = fault_injector
+        self.retry_policy = retry_policy or RetryPolicy()
+        self._retry_rng = random.Random(retry_seed)
+        self._sleep = sleep
+        self.slot_deadline: List[Optional[float]] = [None] * n_slots
+        self.shed: Dict[int, str] = {}        # rid -> shed reason
+        self.retry_after: Dict[int, float] = {}   # rid -> backoff hint (s)
+        self._seg_ewma = 0.0                  # EWMA segment walltime (s)
         self.stats = {"segments": 0, "admitted": 0, "wasted_slot_steps": 0,
-                      "peak_active_slots": 0}
+                      "peak_active_slots": 0, "shed_deadline": 0,
+                      "shed_brownout": 0, "deadline_miss": 0, "retries": 0}
         if paged:
             self.stats.update({
                 "pages_total": n_pages, "pages_in_use": 0,
@@ -114,8 +141,17 @@ class DecodeEngine:
                 "page_fragmentation": 0.0, "admission_deferred_pages": 0})
 
     # ------------------------------------------------------------------ #
-    def submit(self, prompt, max_new_tokens: int = 16) -> int:
-        """Queue a request; returns its id (key into ``outputs``)."""
+    def submit(self, prompt, max_new_tokens: int = 16, *,
+               deadline: Optional[float] = None,
+               priority: int = 0) -> int:
+        """Queue a request; returns its id (key into ``outputs``).
+
+        ``deadline`` is relative (seconds from now on the engine clock):
+        a request that has not *completed* by then is shed — from the
+        queue or mid-decode — with its rid recorded in ``shed`` and a
+        ``retry_after`` hint. ``priority`` orders brown-out shedding
+        under overload (lower priorities shed first); admission itself
+        stays FIFO."""
         prompt = np.asarray(prompt, np.int32)
         if _has_linear_kv(self.cfg):
             # a linear KV cache holds one row per prompt + generated
@@ -130,9 +166,73 @@ class DecodeEngine:
                 f"segments) but max_len is {self.max_len}")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, prompt, max_new_tokens))
+        now = self._clock()
+        self.queue.append(Request(
+            rid, prompt, max_new_tokens,
+            deadline=(now + deadline) if deadline is not None else None,
+            priority=int(priority), submitted_at=now))
         self.outputs[rid] = []
         return rid
+
+    # -- degraded mode (DESIGN.md §16) --------------------------------- #
+    def _retry_after_hint(self) -> float:
+        """Coarse back-pressure hint for a shed request: the EWMA
+        segment walltime times the current queue depth — roughly when
+        the backlog ahead of it will have drained a slot."""
+        return self._seg_ewma * (1 + len(self.queue))
+
+    def _shed_request(self, req: Request, reason: str) -> None:
+        self.shed[req.rid] = reason
+        self.retry_after[req.rid] = self._retry_after_hint()
+        self.stats["shed_" + reason] += 1
+
+    def _free_slot(self, slot: int) -> None:
+        self.active[slot] = False
+        self.slot_rid[slot] = -1
+        self.slot_deadline[slot] = None
+        self.remaining[slot] = 0
+        if self.paged:
+            self._free_slot_pages(slot)
+
+    def _shed_expired(self, now: float) -> None:
+        """Timeout-shedding: queued requests past their deadline never
+        admit; active slots past theirs free immediately (the partial
+        output stays in ``outputs`` — the caller sees what was decoded
+        before the deadline)."""
+        kept = deque()
+        for req in self.queue:
+            if req.deadline is not None and now > req.deadline:
+                self._shed_request(req, "deadline")
+            else:
+                kept.append(req)
+        self.queue = kept
+        for slot in range(self.n_slots):
+            dl = self.slot_deadline[slot]
+            if self.active[slot] and dl is not None and now > dl:
+                rid = self.slot_rid[slot]
+                self.shed[rid] = "deadline"
+                self.retry_after[rid] = self._retry_after_hint()
+                self.stats["shed_deadline"] += 1
+                self._free_slot(slot)
+
+    def _brownout(self) -> None:
+        """Overload graceful degradation: when the queue is deeper than
+        ``brownout_depth``, shed the lowest-priority (then youngest)
+        queued requests until it fits — load sheds before latency
+        collapses, and paying tiers degrade last."""
+        if self.brownout_depth <= 0 or len(self.queue) <= self.brownout_depth:
+            return
+        order = sorted(self.queue,
+                       key=lambda r: (r.priority, -r.submitted_at))
+        drop = {r.rid for r in
+                order[:len(self.queue) - self.brownout_depth]}
+        kept = deque()
+        for req in self.queue:
+            if req.rid in drop:
+                self._shed_request(req, "brownout")
+            else:
+                kept.append(req)
+        self.queue = kept
 
     # ------------------------------------------------------------------ #
     def _make_segment_fn(self):
@@ -213,6 +313,7 @@ class DecodeEngine:
             self.active[slot] = True
             self.remaining[slot] = req.max_new_tokens
             self.slot_rid[slot] = req.rid
+            self.slot_deadline[slot] = req.deadline
             self.stats["admitted"] += 1
 
     def _scatter_paged(self, punits, pids: List[int], slot: int):
@@ -248,7 +349,12 @@ class DecodeEngine:
                 self._slot_npages[slot] += 1
 
     def step_segment(self) -> None:
-        """One fused scan segment + post-segment bookkeeping/admission."""
+        """One fused scan segment + post-segment bookkeeping/admission.
+        Degraded-mode pre-pass: expired requests shed (queued and
+        active) and the queue brown-outs before admission refills the
+        freed slots."""
+        self._shed_expired(self._clock())
+        self._brownout()
         self._admit()
         if self.paged:
             self._grow()
@@ -265,8 +371,24 @@ class DecodeEngine:
             self.stats["page_fragmentation"] = 1.0 - occ
         self.stats["peak_active_slots"] = max(
             self.stats["peak_active_slots"], int(self.active.sum()))
-        toks, self.cache, self.tok = self._segment_fn(
-            self.params, self.cache, self.tok)
+
+        def attempt():
+            # faults strike before the call (inputs are not donated, so
+            # a retried segment replays the identical computation)
+            if self.fault_injector is not None:
+                self.fault_injector.check(self.stats["segments"],
+                                          ("segment",))
+            return self._segment_fn(self.params, self.cache, self.tok)
+
+        t0 = time.perf_counter()
+        toks, self.cache, self.tok = retry_call(
+            attempt, policy=self.retry_policy, retry_on=(TransientFault,),
+            rng=self._retry_rng, sleep=self._sleep,
+            on_retry=lambda *_: self.stats.__setitem__(
+                "retries", self.stats["retries"] + 1))
+        dt = time.perf_counter() - t0
+        self._seg_ewma = (dt if self._seg_ewma == 0.0
+                          else 0.2 * dt + 0.8 * self._seg_ewma)
         toks = np.asarray(toks)                     # (n_slots, segment)
         self.stats["segments"] += 1
         self.stats["wasted_slot_steps"] += int(
@@ -282,10 +404,11 @@ class DecodeEngine:
             self.remaining[slot] -= take
             self.stats["wasted_slot_steps"] += self.segment - take
             if self.remaining[slot] == 0:
-                self.active[slot] = False           # slot freed for reuse
-                self.slot_rid[slot] = -1
-                if self.paged:
-                    self._free_slot_pages(slot)
+                dl = self.slot_deadline[slot]
+                if dl is not None and self._clock() > dl:
+                    # completed, delivered — but late
+                    self.stats["deadline_miss"] += 1
+                self._free_slot(slot)               # slot freed for reuse
 
     def _free_slot_pages(self, slot: int) -> None:
         """Reclaim a freed slot's pages and reservation.  The block table

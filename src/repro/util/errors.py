@@ -1,0 +1,30 @@
+"""Shared exception types for versioned on-disk artifacts.
+
+Every persisted artifact in this repo (``calibration.json``,
+``autotune.json``) carries a ``version`` field; loaders must fail with a
+*descriptive* error naming the found and expected versions — a bare
+``KeyError``/``ValueError`` from deep inside a consumer tells the user
+nothing about which file is stale or how to regenerate it.
+"""
+from __future__ import annotations
+
+
+class ArtifactVersionError(ValueError):
+    """A persisted artifact has the wrong version or a broken schema.
+
+    Subclasses :class:`ValueError` so existing ``except ValueError``
+    guards (e.g. the lazy autotune-table load) keep treating a stale
+    artifact as "no artifact" instead of crashing.
+    """
+
+    def __init__(self, path: str, found, expected, *, kind: str = "artifact",
+                 detail: str = "") -> None:
+        self.path = path
+        self.found = found
+        self.expected = expected
+        self.kind = kind
+        msg = (f"{kind} {path!r}: found version {found!r}, expected "
+               f"{expected!r}")
+        if detail:
+            msg += f" ({detail})"
+        super().__init__(msg)

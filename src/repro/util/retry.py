@@ -1,0 +1,70 @@
+"""Bounded retry with exponential backoff and full jitter.
+
+One small primitive shared by every retry path in the repo (the schedule
+executor's fault recovery and the serve engine's segment retries): retry
+a callable a bounded number of times, sleeping ``U(0, min(cap,
+base * 2**attempt))`` between attempts — AWS-style *full jitter*, which
+decorrelates retry storms while keeping the expected backoff
+exponential. The jitter stream comes from a caller-owned
+``random.Random``, so a seeded RNG makes the whole retry schedule
+deterministic (the executor tests replay failures bit-exactly).
+"""
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple, Type
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Backoff shape: ``attempts`` total tries, delay before retry *k*
+    (0-indexed) drawn from ``U(0, min(cap, base * 2**k))``; ``jitter=
+    False`` uses the deterministic upper bound instead."""
+
+    attempts: int = 3
+    base: float = 0.05
+    cap: float = 2.0
+    jitter: bool = True
+
+    def __post_init__(self) -> None:
+        if self.attempts < 1:
+            raise ValueError(f"attempts must be >= 1, got {self.attempts}")
+        if self.base < 0 or self.cap < 0:
+            raise ValueError("base/cap must be >= 0")
+
+    def delay(self, attempt: int, rng: random.Random) -> float:
+        bound = min(self.cap, self.base * (2.0 ** attempt))
+        return rng.uniform(0.0, bound) if self.jitter else bound
+
+
+def retry_call(fn: Callable, *,
+               policy: Optional[RetryPolicy] = None,
+               retry_on: Tuple[Type[BaseException], ...] = (Exception,),
+               rng: Optional[random.Random] = None,
+               seed: int = 0,
+               sleep: Callable[[float], None] = time.sleep,
+               on_retry: Optional[Callable] = None):
+    """Call ``fn()`` up to ``policy.attempts`` times.
+
+    Exceptions matching ``retry_on`` trigger a backoff sleep and a
+    retry; the last attempt's exception propagates unchanged (callers
+    escalate — e.g. the executor turns an exhausted transient fault into
+    a fatal member drop). ``on_retry(attempt, exc, delay)`` observes
+    every retry (stats counters); ``sleep`` is injectable so tests run
+    without wall-clock delays.
+    """
+    policy = policy or RetryPolicy()
+    rng = rng if rng is not None else random.Random(seed)
+    for attempt in range(policy.attempts):
+        try:
+            return fn()
+        except retry_on as exc:
+            if attempt == policy.attempts - 1:
+                raise
+            delay = policy.delay(attempt, rng)
+            if on_retry is not None:
+                on_retry(attempt, exc, delay)
+            sleep(delay)
+    raise AssertionError("unreachable")   # pragma: no cover

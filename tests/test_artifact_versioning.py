@@ -1,0 +1,99 @@
+"""Versioned on-disk artifacts must fail loudly and descriptively: a
+stale or schema-broken ``calibration.json`` / ``autotune.json`` raises
+:class:`ArtifactVersionError` naming the file, the found and the
+expected version — never a bare KeyError from deep inside a consumer.
+The error subclasses ValueError so existing lenient guards (treat a
+stale artifact as "no artifact") keep working."""
+import json
+
+import pytest
+
+from repro.core.calibration import (CALIBRATION_VERSION, load_artifact,
+                                    save_artifact)
+from repro.kernels import autotune
+from repro.util.errors import ArtifactVersionError
+
+
+def _calib_payload():
+    return {"version": CALIBRATION_VERSION, "gpu": {}, "profiles": {},
+            "pairs": []}
+
+
+class TestCalibrationArtifact:
+    def test_roundtrip_ok(self, tmp_path):
+        path = save_artifact(_calib_payload(), str(tmp_path / "c.json"))
+        assert load_artifact(path)["version"] == CALIBRATION_VERSION
+
+    def test_stale_version_raises_descriptively(self, tmp_path):
+        payload = _calib_payload()
+        payload["version"] = CALIBRATION_VERSION + 1
+        path = tmp_path / "c.json"
+        path.write_text(json.dumps(payload))
+        with pytest.raises(ArtifactVersionError) as ei:
+            load_artifact(str(path))
+        err = ei.value
+        assert isinstance(err, ValueError)
+        assert err.path == str(path)
+        assert err.found == CALIBRATION_VERSION + 1
+        assert err.expected == CALIBRATION_VERSION
+        msg = str(err)
+        assert str(path) in msg and "calibration artifact" in msg
+        assert "re-run benchmarks/calibrate.py" in msg
+
+    def test_missing_version_field_raises(self, tmp_path):
+        payload = _calib_payload()
+        del payload["version"]
+        path = tmp_path / "c.json"
+        path.write_text(json.dumps(payload))
+        with pytest.raises(ArtifactVersionError) as ei:
+            load_artifact(str(path))
+        assert ei.value.found is None
+
+
+class TestAutotuneArtifact:
+    def _payload(self):
+        return {"version": autotune.AUTOTUNE_VERSION, "entries": {},
+                "meta": {"backend": "cpu"}}
+
+    def test_table_accepts_current_schema(self):
+        table = autotune.AutotuneTable(self._payload())
+        assert table.entries == {}
+
+    def test_wrong_version_raises(self):
+        payload = self._payload()
+        payload["version"] = autotune.AUTOTUNE_VERSION + 3
+        with pytest.raises(ArtifactVersionError) as ei:
+            autotune.AutotuneTable(payload)
+        assert ei.value.expected == autotune.AUTOTUNE_VERSION
+        assert ei.value.found == autotune.AUTOTUNE_VERSION + 3
+        assert "autotune artifact" in str(ei.value)
+
+    @pytest.mark.parametrize("missing", ["entries", "meta"])
+    def test_missing_schema_field_raises(self, missing):
+        payload = self._payload()
+        del payload[missing]
+        with pytest.raises(ArtifactVersionError, match=missing):
+            autotune.AutotuneTable(payload)
+
+    def test_missing_backend_raises(self):
+        payload = self._payload()
+        del payload["meta"]["backend"]
+        with pytest.raises(ArtifactVersionError, match="backend"):
+            autotune.AutotuneTable(payload)
+
+    def test_load_artifact_names_the_file(self, tmp_path):
+        path = tmp_path / "autotune.json"
+        payload = self._payload()
+        payload["version"] = 999
+        path.write_text(json.dumps(payload))
+        with pytest.raises(ArtifactVersionError) as ei:
+            autotune.load_artifact(str(path))
+        assert ei.value.path == str(path)
+
+    def test_stale_artifact_still_reads_as_value_error(self):
+        # the lenient lazy-load guard catches ValueError; a stale table
+        # must stay inside that contract
+        payload = self._payload()
+        payload["version"] = 0
+        with pytest.raises(ValueError):
+            autotune.AutotuneTable(payload)

@@ -63,3 +63,47 @@ def test_modality_stubs_present():
     ba = make_batch(audio, 2, 32)
     assert bv["vision_embeds"].shape == (2, vlm.vision_tokens, vlm.d_model)
     assert ba["frames"].shape == (2, audio.encoder_seq, audio.d_model)
+
+
+# ====================================================================== #
+# Corrupted / missing checkpoint files (DESIGN.md §16)
+# ====================================================================== #
+def test_load_missing_file_raises_filenotfound(tmp_path):
+    import pytest
+
+    from repro.checkpoint import CheckpointError  # noqa: F401  (re-export)
+    with pytest.raises(FileNotFoundError):
+        load_pytree(str(tmp_path / "nope.npz"), {"a": jnp.ones((2,))})
+
+
+def test_load_corrupted_file_raises_checkpoint_error(tmp_path):
+    import pytest
+
+    from repro.checkpoint import CheckpointError
+    path = tmp_path / "garbage.npz"
+    path.write_bytes(b"this is not an npz archive")
+    with pytest.raises(CheckpointError) as ei:
+        load_pytree(str(path), {"a": jnp.ones((2,))})
+    assert ei.value.path == str(path)
+    assert str(path) in str(ei.value)
+
+
+def test_load_truncated_file_raises_checkpoint_error(tmp_path):
+    import pytest
+
+    from repro.checkpoint import CheckpointError
+    path = tmp_path / "trunc.npz"
+    save_pytree(str(path), {"a": jnp.arange(4096, dtype=jnp.float32)})
+    raw = path.read_bytes()
+    path.write_bytes(raw[:len(raw) // 2])
+    with pytest.raises(CheckpointError):
+        load_pytree(str(path), {"a": jnp.arange(4096, dtype=jnp.float32)})
+
+
+def test_save_pytree_is_atomic_no_tmp_left(tmp_path):
+    path = tmp_path / "ck.npz"
+    save_pytree(str(path), {"a": jnp.ones((3,))})
+    save_pytree(str(path), {"a": jnp.zeros((3,))})   # overwrite in place
+    assert sorted(p.name for p in tmp_path.iterdir()) == ["ck.npz"]
+    out = load_pytree(str(path), {"a": jnp.ones((3,))})
+    assert (np.asarray(out["a"]) == 0).all()

@@ -17,9 +17,9 @@ import random
 
 import pytest
 
-from repro.core import (ClusterState, InterferenceModel, Simulator,
-                        make_scheduler, paper_interference_model,
-                        simulation_trace)
+from repro.core import (ClusterState, FaultModel, InterferenceModel,
+                        Simulator, make_scheduler,
+                        paper_interference_model, simulation_trace)
 from repro.core.job import Job
 from repro.core.perf_model import GPU_2080TI
 from repro.core.schedulers import ALL_POLICIES
@@ -51,6 +51,9 @@ def _assert_equivalent(a, b):
         assert jb.waiting_time == pytest.approx(ja.waiting_time,
                                                 rel=REL, abs=1e-3)
         assert jb.preemptions == ja.preemptions
+        assert jb.failures == ja.failures
+        assert jb.lost_iters == pytest.approx(ja.lost_iters,
+                                              rel=REL, abs=1e-3)
 
 
 @pytest.mark.parametrize("policy", sorted(ALL_POLICIES))
@@ -135,10 +138,12 @@ def test_heap_deadlock_detection():
 # A trace *spec* is a tuple of per-job primitives
 #     (gap_centiseconds, model_index, gpus, iters)
 # and a *chaos* plan
-#     (chaos_seed, preempt_every, reconfig_every)
-# where every-N of 0 disables that injection. Everything is integers so
-# hypothesis shrinks cleanly and failed examples paste verbatim into
-# REGRESSION_SPECS below.
+#     (chaos_seed, preempt_every, reconfig_every
+#      [, fail_every, server_fail_every])
+# where every-N of 0 disables that injection (the two fault-injection
+# slots are optional so older 3-tuple corpus entries stay valid).
+# Everything is integers so hypothesis shrinks cleanly and failed
+# examples paste verbatim into REGRESSION_SPECS below.
 
 _MODEL_NAMES = sorted(PAPER_TASK_PROFILES)
 _FUZZ_GPUS = (1, 2, 4, 8, 12, 16)
@@ -167,7 +172,8 @@ class ChaosScheduler:
     any divergence the chaos amplifies is a real engine/decision-path
     divergence."""
 
-    def __init__(self, inner, chaos_seed, preempt_every, reconfig_every):
+    def __init__(self, inner, chaos_seed, preempt_every, reconfig_every,
+                 fail_every=0, server_fail_every=0):
         self.inner = inner
         self.name = inner.name
         self.preemptive = inner.preemptive
@@ -178,12 +184,22 @@ class ChaosScheduler:
         self._seed = chaos_seed
         self._preempt_every = preempt_every
         self._reconfig_every = reconfig_every
+        self._fail_every = fail_every
+        self._server_fail_every = server_fail_every
         self.reset()
+
+    # each fault flavor stops after this many injections: an unbounded
+    # kill loop can starve a full-cluster job of its next checkpoint
+    # forever (progress truncates to zero every time), so the budget
+    # guarantees every fuzz run terminates
+    FAULT_BUDGET = 20
 
     def reset(self):
         self.inner.reset()
         self._rng = random.Random(self._seed)
         self._passes = 0
+        self._fails_left = self.FAULT_BUDGET
+        self._server_fails_left = self.FAULT_BUDGET
 
     def schedule(self, sim):
         self.inner.schedule(sim)
@@ -206,6 +222,22 @@ class ChaosScheduler:
                     # shrinking the sub-batch only reduces the memory
                     # footprint, so the reconfig is always feasible
                     sim.reconfigure_job(job, (job.sub_batch + 1) // 2)
+        if (self._fail_every and self._fails_left
+                and self._passes % self._fail_every == 0):
+            running = sorted(sim.running)
+            if running:
+                self._fails_left -= 1
+                sim.fail_job(sim.running[
+                    running[rng.randrange(len(running))]])
+                self.inner.schedule(sim)   # revive, like the preempt path
+        if (self._server_fail_every and self._server_fails_left
+                and self._passes % self._server_fail_every == 0):
+            # repair_after keeps the event loop deadlock-free: the
+            # recover event is a real future event in the fault heap
+            self._server_fails_left -= 1
+            sim.fail_server(rng.randrange(sim.cluster.n_servers),
+                            repair_after=120.0)
+            self.inner.schedule(sim)
 
 
 def _fuzz_run(spec, chaos, policy, engine, decision=None):
@@ -213,9 +245,14 @@ def _fuzz_run(spec, chaos, policy, engine, decision=None):
     cluster = ClusterState(n_servers=4, gpus_per_server=4,
                            gpu_capacity_bytes=11 * 2 ** 30)
     sched = ChaosScheduler(make_scheduler(policy), *chaos)
+    # zero-rate model: empty precomputed timeline (bit-identical event
+    # loop), but chaos fail_job injections truncate progress to its
+    # 50-iteration checkpoints — exercising the recovery arithmetic on
+    # every engine/decision path
     sim = Simulator(cluster, jobs, sched,
                     interference=paper_interference_model(),
-                    engine=engine, decision=decision, max_events=500_000)
+                    engine=engine, decision=decision, max_events=500_000,
+                    fault_model=FaultModel(checkpoint_interval=50.0))
     res = sim.run()
     return res, list(sim.log), res.summary()
 
@@ -263,6 +300,17 @@ REGRESSION_SPECS = [
     ("no-chaos-baseline",
      ((0, 0, 1, 20), (10000, 1, 16, 1000), (0, 2, 8, 200)),
      (0, 0, 0)),
+    # fault injections (DESIGN.md §16): job crashes truncating progress
+    # to checkpoints, plus correlated server kills with in-heap repairs —
+    # requeue ordering, peer restore, and down-server placement must stay
+    # identical across engines and decision paths
+    ("fault-chaos-mixed",
+     ((0, 0, 8, 400), (100, 1, 4, 200), (0, 2, 2, 120), (500, 3, 1, 60),
+      (0, 4, 4, 300)),
+     (13, 0, 2, 3, 5)),
+    ("server-kill-storm",
+     ((0, 5, 16, 600), (0, 0, 2, 80), (200, 1, 2, 80), (0, 2, 1, 40)),
+     (5, 3, 0, 4, 2)),
 ]
 
 
@@ -285,6 +333,8 @@ _CHAOS_ST = st.tuples(
     st.integers(min_value=0, max_value=2 ** 16),          # chaos seed
     st.sampled_from((0, 2, 3, 5)),                        # preempt every
     st.sampled_from((0, 2, 4)),                           # reconfig every
+    st.sampled_from((0, 3, 5)),                           # fail every
+    st.sampled_from((0, 4)),                              # server-fail every
 )
 
 

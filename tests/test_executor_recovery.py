@@ -1,0 +1,219 @@
+"""Executor fault recovery (DESIGN.md §16): scripted step faults,
+bounded-backoff retry of transients, fatal member drop with group
+re-fusion, async checkpointing, and the acceptance invariant —
+restart-from-checkpoint replays the remaining steps bit-exactly."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.cluster import (FatalFault, FaultSpec, JobSpec, PlanOp,
+                                  PlanPhase, ScheduleExecutor,
+                                  ScriptedFaults, TransientFault)
+from repro.util.retry import RetryPolicy
+
+
+def _spec(name="minicpm-2b", batch=2, seq=32, **kw):
+    cfg = dataclasses.replace(get_config(name).reduced(), dtype="float32")
+    return JobSpec(cfg, batch=batch, seq=seq, **kw)
+
+
+def _leaves_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        if not (np.asarray(x) == np.asarray(y)).all():
+            return False
+    return True
+
+
+def _ex(**kw):
+    kw.setdefault("donate", True)
+    kw.setdefault("sleep", lambda d: None)   # no wall-clock in tests
+    return ScheduleExecutor(**kw)
+
+
+# ===================================================================== #
+# Scripted fault injector
+# ===================================================================== #
+class TestScriptedFaults:
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultSpec(call=0, job="a", kind="weird")
+
+    def test_fires_only_on_matching_call_and_member(self):
+        inj = ScriptedFaults([FaultSpec(call=2, job="a")])
+        inj.check(0, ("a",))
+        inj.check(2, ("b",))        # wrong member: silent
+        with pytest.raises(TransientFault):
+            inj.check(2, ("a", "b"))
+        inj.check(2, ("a",))        # times=1 budget consumed
+
+    def test_times_budget_and_fatal_kind(self):
+        inj = ScriptedFaults([FaultSpec(call=1, job="a", times=2),
+                              FaultSpec(call=5, job="b", kind="fatal")])
+        for _ in range(2):
+            with pytest.raises(TransientFault):
+                inj.check(1, ("a",))
+        inj.check(1, ("a",))
+        with pytest.raises(FatalFault) as ei:
+            inj.check(5, ("b",))
+        assert ei.value.job == "b"
+
+
+# ===================================================================== #
+# Retry / degrade inside step_group
+# ===================================================================== #
+class TestStepGroupFaults:
+    def test_transient_absorbed_by_retry(self):
+        ex = _ex(fault_injector=ScriptedFaults(
+            [FaultSpec(call=1, job="a", times=2)]),
+            retry_policy=RetryPolicy(attempts=3, base=0.0))
+        ex.submit("a", _spec(), 3)
+        ex.start("a")
+        for _ in range(3):
+            res = ex.step_group(["a"])
+            assert "dropped" not in res
+        assert ex.runs["a"].steps_done == 3
+        assert ex.runs["a"].retries == 2
+        assert ex.retries_total == 2
+        assert ex.drops_total == 0
+
+    def test_exhausted_transient_escalates_to_drop(self):
+        ex = _ex(fault_injector=ScriptedFaults(
+            [FaultSpec(call=1, job="a", times=3)]),
+            retry_policy=RetryPolicy(attempts=3, base=0.0))
+        ex.submit("a", _spec(), 3)
+        ex.start("a")
+        ex.step_group(["a"])
+        res = ex.step_group(["a"])
+        assert res["dropped"] == "a"
+        assert ex.runs["a"].failed
+        assert ex.runs["a"].steps_done == 1
+        assert ex.drops_total == 1
+        with pytest.raises(RuntimeError, match="not running"):
+            ex.step_group(["a"])    # failed members cannot step
+
+    def test_fatal_fault_in_group_drops_only_the_victim(self):
+        """Bit-exactness of the degrade path: the survivor's state after
+        the drop equals a solo run of the same step count."""
+        specs = {"a": _spec(), "b": _spec(seed=3)}
+        ex = _ex(fault_injector=ScriptedFaults(
+            [FaultSpec(call=2, job="b", kind="fatal")]))
+        for n, s in specs.items():
+            ex.submit(n, s, 4)
+            ex.start(n)
+        for _ in range(2):
+            assert "dropped" not in ex.step_group(["a", "b"])
+        res = ex.step_group(["a", "b"])
+        assert res["dropped"] == "b"
+        # survivors keep stepping: the re-fused solo program compiles
+        compiles_before = ex.compiles
+        for _ in range(2):
+            assert "dropped" not in ex.step_group(["a"])
+        assert ex.compiles == compiles_before + 1
+        assert ex.runs["a"].steps_done == 4
+        assert ex.runs["b"].steps_done == 2 and ex.runs["b"].failed
+
+        # degraded mode costs the survivor nothing numerically: its
+        # state equals an uninterrupted solo run of the same length
+        solo = _ex()
+        solo.submit("a", specs["a"], 4)
+        solo.start("a")
+        for _ in range(4):
+            solo.step_group(["a"])
+        assert _leaves_equal(ex.runs["a"].params, solo.runs["a"].params)
+
+
+# ===================================================================== #
+# Checkpoint / restart
+# ===================================================================== #
+class TestCheckpointRestart:
+    def test_restart_from_checkpoint_bit_exact(self, tmp_path):
+        """The acceptance invariant: fail at step 4 (checkpoint at 4),
+        restart, run to 6 — params and opt state must be bit-identical
+        to an uninterrupted 6-step run."""
+        spec = _spec()
+        base = _ex()
+        base.submit("a", spec, 6)
+        base.start("a")
+        for _ in range(6):
+            base.step_group(["a"])
+
+        ex = _ex(checkpoint_dir=str(tmp_path), checkpoint_every=2,
+                 fault_injector=ScriptedFaults(
+                     [FaultSpec(call=4, job="a", kind="fatal")]))
+        ex.submit("a", spec, 6)
+        ex.start("a")
+        for _ in range(4):
+            assert "dropped" not in ex.step_group(["a"])
+        assert ex.step_group(["a"])["dropped"] == "a"
+        assert ex.runs["a"].failed
+        assert ex.runs["a"].last_ckpt_step == 4
+
+        run = ex.restart("a")
+        assert not run.failed and run.restarts == 1
+        assert run.steps_done == 4          # resumed at the checkpoint
+        assert ex.checkpoints_written == 2  # steps 2 and 4 landed
+        while run.steps_done < 6:
+            assert "dropped" not in ex.step_group(["a"])
+        assert _leaves_equal(run.params, base.runs["a"].params)
+        assert _leaves_equal(run.opt, base.runs["a"].opt)
+        assert run.last_metrics["loss"] == base.runs["a"].last_metrics["loss"]
+
+    def test_restart_without_checkpoint_starts_from_scratch(self, tmp_path):
+        ex = _ex(checkpoint_dir=str(tmp_path), checkpoint_every=0,
+                 fault_injector=ScriptedFaults(
+                     [FaultSpec(call=1, job="a", kind="fatal")]))
+        ex.submit("a", _spec(), 4)
+        ex.start("a")
+        ex.step_group(["a"])
+        assert ex.step_group(["a"])["dropped"] == "a"
+        run = ex.restart("a")
+        assert run.steps_done == 0 and run.restarts == 1
+
+    def test_checkpoint_requires_dir_and_started_run(self, tmp_path):
+        ex = _ex()
+        ex.submit("a", _spec(), 2)
+        ex.start("a")
+        with pytest.raises(RuntimeError, match="no checkpoint_dir"):
+            ex.checkpoint("a")
+        ex2 = _ex(checkpoint_dir=str(tmp_path))
+        ex2.submit("a", _spec(), 2)
+        with pytest.raises(RuntimeError, match="not started"):
+            ex2.checkpoint("a")
+        with pytest.raises(RuntimeError, match="not started"):
+            ex2.restart("a")
+
+    def test_background_write_error_surfaces_at_flush(self, tmp_path):
+        blocker = tmp_path / "blocker"
+        blocker.write_text("not a directory")
+        ex = _ex(checkpoint_dir=str(blocker))
+        ex.submit("a", _spec(), 2)
+        ex.start("a")
+        ex.checkpoint("a")          # enqueue succeeds; the write fails
+        with pytest.raises(OSError):
+            ex.flush_checkpoints()
+
+
+# ===================================================================== #
+# Degraded-mode plan execution
+# ===================================================================== #
+class TestExecuteDegraded:
+    def test_failed_member_drops_and_survivors_finish(self):
+        ex = _ex(fault_injector=ScriptedFaults(
+            [FaultSpec(call=2, job="b", kind="fatal")]))
+        ex.submit("a", _spec(), 4)
+        ex.submit("b", _spec(seed=3), 4)
+        plan = [PlanPhase(
+            ops=(PlanOp("start", "a"), PlanOp("start", "b")),
+            quotas=(("a", 4), ("b", 4)),
+            groups=(("a", "b"),))]
+        report = ex.execute(plan)
+        assert report["a"]["steps"] == 4 and not report["a"]["failed"]
+        assert report["b"]["steps"] == 2 and report["b"]["failed"]
+        assert report["b"]["restarts"] == 0
+        assert ex.drops_total == 1
+        # walltime is attributed to survivors only
+        assert report["a"]["walltime"] > 0.0
+        assert report["b"]["walltime"] == 0.0

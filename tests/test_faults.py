@@ -1,0 +1,353 @@
+"""Fault injection and recovery in the simulator (DESIGN.md §16):
+FaultModel timeline determinism and validation, checkpoint-truncated
+job failure accounting, server down/recover with deadlock-free repair
+scheduling, graceful peer rescaling on a donor failure, and the
+engine/decision-path equivalence guarantees under an active fault
+timeline.  The key invariant: a zero-rate FaultModel is bit-identical
+to running with no fault model at all, for every policy."""
+import math
+import random
+
+import pytest
+
+from repro.core import (ClusterState, FaultModel, InterferenceModel,
+                        Simulator, make_scheduler,
+                        paper_interference_model, simulation_trace)
+from repro.core.job import Job, JobState
+from repro.core.perf_model import PerfParams
+from repro.core.schedulers import ALL_POLICIES, SJF_BSBF
+
+GB = 2 ** 30
+REL = 1e-6
+
+
+def mk_job(jid, arrival, gpus, iters, beta=1e-2, batch=10,
+           mem_per_sample=0.01):
+    perf = PerfParams(alpha_comp=0.0, beta_comp=beta, alpha_comm=0.0,
+                      beta_comm=0.0, msg_bytes=0.0, mem_base=1 * GB,
+                      mem_per_sample=mem_per_sample * GB)
+    return Job(jid=jid, model="m", arrival=arrival, gpus=gpus, iters=iters,
+               batch=batch, perf=perf)
+
+
+class _Inject:
+    """Scheduler wrapper firing scripted fault actions keyed by pass
+    count (after the inner pass, like the chaos harness), then running
+    one more inner pass so requeued victims are not stranded."""
+
+    def __init__(self, inner, actions):
+        self.inner = inner
+        self.name = inner.name
+        self.preemptive = inner.preemptive
+        self.tick_interval = inner.tick_interval
+        self.tick_only = inner.tick_only
+        self.reads_running_progress = inner.reads_running_progress
+        self.progress_scope = inner.progress_scope
+        self._actions = dict(actions)
+        self.fired = {}
+        self.reset()
+
+    def reset(self):
+        self.inner.reset()
+        self._passes = 0
+
+    def schedule(self, sim):
+        self.inner.schedule(sim)
+        self._passes += 1
+        action = self._actions.pop(self._passes, None)
+        if action is not None:
+            self.fired[self._passes] = action(sim)
+            self.inner.schedule(sim)
+
+
+# ===================================================================== #
+# FaultModel: timeline + truncation unit tests
+# ===================================================================== #
+class TestFaultModel:
+    def test_default_model_injects_nothing(self):
+        fm = FaultModel()
+        assert not fm.enabled
+        assert fm.timeline(8, range(20)) == []
+
+    def test_timeline_deterministic_and_sorted(self):
+        fm = FaultModel(seed=5, job_mtbf=3000.0, server_mtbf=20000.0)
+        a = fm.timeline(4, range(10))
+        b = fm.timeline(4, range(10))
+        assert a == b and a
+        times = [e[0] for e in a]
+        assert times == sorted(times)
+        assert [e[1] for e in a] == list(range(len(a)))
+        # a different seed reshuffles the whole timeline
+        assert a != FaultModel(seed=6, job_mtbf=3000.0,
+                               server_mtbf=20000.0).timeline(4, range(10))
+
+    def test_job_only_timeline_targets_given_jids(self):
+        fm = FaultModel(seed=1, job_mtbf=5000.0)
+        tl = fm.timeline(4, [3, 7])
+        assert tl
+        assert all(kind == "fail_job" and target in (3, 7)
+                   for _t, _s, kind, target in tl)
+        assert all(t < fm.horizon for t, *_ in tl)
+
+    def test_correlated_kills_hit_rack_neighbours(self):
+        fm = FaultModel(seed=2, server_mtbf=30000.0, server_repair=100.0,
+                        correlated_servers=2)
+        tl = fm.timeline(3, [])
+        fails = [e for e in tl if e[2] == "fail_server"]
+        recovers = [e for e in tl if e[2] == "recover_server"]
+        assert fails and len(fails) == len(recovers)
+        by_time = {}
+        for t, _s, _k, sid in fails:
+            by_time.setdefault(t, []).append(sid)
+        for t, sids in by_time.items():
+            assert len(sids) == 2
+            # events sort by target, so either orientation of the
+            # (origin, origin+1 mod n) pair is a valid neighbour kill
+            assert ((sids[0] + 1) % 3 == sids[1]
+                    or (sids[1] + 1) % 3 == sids[0])
+            # each kill carries its matching repair
+            assert sum(1 for tr, _s, _k, sr in recovers
+                       if tr == pytest.approx(t + 100.0)
+                       and sr in sids) == 2
+
+    def test_weibull_mean_normalization(self):
+        # E[lifetime] must equal server_mtbf regardless of shape, so the
+        # long-run failure count ~ horizon / (mtbf + repair) for every
+        # shape.  Without normalization, shape=2 would drift ~8% high.
+        expect = 1_000_000 / (1000.0 + 600.0)
+        for shape in (1.0, 2.0):
+            fm = FaultModel(seed=4, server_mtbf=1000.0, server_repair=600.0,
+                            weibull_shape=shape, horizon=1_000_000.0)
+            n = sum(1 for e in fm.timeline(1, []) if e[2] == "fail_server")
+            assert abs(n - expect) < 40, (shape, n)
+
+    @pytest.mark.parametrize("kw", [
+        {"job_mtbf": -1.0}, {"server_mtbf": -0.5},
+        {"server_repair": 0.0}, {"weibull_shape": 0.0},
+        {"correlated_servers": 0}, {"checkpoint_interval": -1.0},
+    ])
+    def test_validation(self, kw):
+        with pytest.raises(ValueError):
+            FaultModel(**kw)
+
+    def test_truncate_progress(self):
+        fm = FaultModel(checkpoint_interval=50.0)
+        assert fm.truncate_progress(0.0) == 0.0
+        assert fm.truncate_progress(49.9) == 0.0
+        assert fm.truncate_progress(120.0) == 100.0
+        assert fm.truncate_progress(150.0) == 150.0
+        # float-noise rescue: a hair under a boundary still counts as
+        # the boundary, capped at the actual progress
+        assert fm.truncate_progress(99.99999999) == 99.99999999
+        # no checkpointing -> the attempt restarts from scratch
+        assert FaultModel().truncate_progress(123.4) == 0.0
+
+
+# ===================================================================== #
+# Engine semantics: fail_job / fail_server / recover_server
+# ===================================================================== #
+class TestFailJob:
+    def test_truncates_to_checkpoint_and_requeues(self):
+        j0 = mk_job(0, 0.0, 4, 100)        # t_iter = 0.1s
+        j1 = mk_job(1, 4.0, 4, 50)         # arrival event = injection point
+        cluster = ClusterState(n_servers=1, gpus_per_server=4)
+        sched = _Inject(make_scheduler("fifo"),
+                        {2: lambda sim: sim.fail_job(sim.jobs[0])})
+        sim = Simulator(cluster, [j0, j1], sched,
+                        fault_model=FaultModel(checkpoint_interval=30.0))
+        sim.run()
+        # at t=4 j0 had 40 iters done: 30 survive, 10 roll back
+        assert j0.failures == 1
+        assert j0.lost_iters == pytest.approx(10.0)
+        assert j0.preemptions >= 1
+        assert j0.iters_done == pytest.approx(100.0)   # conservation
+        assert j1.iters_done == pytest.approx(50.0)
+        assert (4.0, "fail_job", 0) in [(e[0], e[1], e[2]) for e in sim.log]
+        # requeued -> restarted: two start events for j0
+        assert sum(1 for e in sim.log
+                   if e[1] == "start" and e[2] == 0) == 2
+
+    def test_no_fault_model_restarts_attempt_from_scratch(self):
+        j0 = mk_job(0, 0.0, 4, 100)
+        j1 = mk_job(1, 4.0, 4, 50)
+        cluster = ClusterState(n_servers=1, gpus_per_server=4)
+        sched = _Inject(make_scheduler("fifo"),
+                        {2: lambda sim: sim.fail_job(sim.jobs[0])})
+        sim = Simulator(cluster, [j0, j1], sched)
+        sim.run()
+        assert j0.lost_iters == pytest.approx(40.0)    # everything rolls back
+        assert j0.iters_done == pytest.approx(100.0)
+
+    def test_fail_job_requires_running(self):
+        j0 = mk_job(0, 0.0, 4, 100)
+        cluster = ClusterState(n_servers=1, gpus_per_server=4)
+        sim = Simulator(cluster, [j0], make_scheduler("fifo"))
+        with pytest.raises(RuntimeError, match="not running"):
+            sim.fail_job(j0)
+
+
+class TestFailServer:
+    def test_kill_and_scheduled_repair_no_deadlock(self):
+        """A full-cluster kill with nothing else in flight must not
+        deadlock: the repair event lives in the fault heap and revives
+        the cluster."""
+        j0 = mk_job(0, 0.0, 4, 100)
+        cluster = ClusterState(n_servers=1, gpus_per_server=4)
+        sched = _Inject(make_scheduler("fifo"),
+                        {1: lambda sim: sim.fail_server(0, repair_after=5.0)})
+        sim = Simulator(cluster, [j0], sched)
+        sim.run()
+        assert j0.failures == 1
+        assert j0.state is JobState.FINISHED
+        assert j0.iters_done == pytest.approx(100.0)
+        kinds = [(e[1], e[0]) for e in sim.log]
+        t_fail = dict((k, t) for k, t in kinds)["fail_server"]
+        t_rec = dict((k, t) for k, t in kinds)["recover_server"]
+        assert t_rec == pytest.approx(t_fail + 5.0)
+        restart = [e[0] for e in sim.log
+                   if e[1] == "start" and e[2] == 0][-1]
+        assert restart >= t_rec
+
+    def test_down_server_leaves_allocatable_pool(self):
+        seen = {}
+
+        def act(sim):
+            sid = next(iter(sim.jobs[0].placement)) // 2
+            assert sim.fail_server(sid, repair_after=50.0)
+            seen["sid"] = sid
+            seen["down"] = set(sim.cluster.down_servers)
+            # idempotent: a dead server cannot die twice
+            assert not sim.fail_server(sid, repair_after=50.0)
+            # a healthy server cannot "recover"
+            assert not sim.recover_server(1 - sid)
+            with pytest.raises(ValueError, match="no server"):
+                sim.fail_server(99)
+            return True
+
+        j0 = mk_job(0, 0.0, 2, 100)
+        j1 = mk_job(1, 1.0, 2, 400)
+        cluster = ClusterState(n_servers=2, gpus_per_server=2)
+        sched = _Inject(make_scheduler("fifo"), {2: act})
+        sim = Simulator(cluster, [j0, j1], sched)
+        sim.run()
+        assert sched.fired[2] is True
+        assert seen["down"] == {seen["sid"]}
+        assert not sim.cluster.down_servers    # repaired by the end
+        assert j0.failures == 1 and j1.failures == 0
+        assert j0.iters_done == pytest.approx(100.0)
+
+
+class TestPeerRescale:
+    def _scenario(self, fault_model):
+        """SJF-BSBF donor/sharer pair on one GPU: the donor shrinks its
+        sub-batch to admit the sharer; when the sharer is killed the
+        donor should be restored — exactly iff rescale_peers."""
+        perf = PerfParams(alpha_comp=0.01, beta_comp=0.01, alpha_comm=0.0,
+                          beta_comm=0.0, msg_bytes=0.0, delta=2.0,
+                          mem_base=4.0 * GB, mem_per_sample=0.25 * GB,
+                          param_bytes=1e8, n_workers=1)
+        t_a = perf.t_iter(4)
+        jobs = [Job(jid=0, model="m0", arrival=0.0, gpus=1, iters=30.0,
+                    batch=4, perf=perf),
+                Job(jid=1, model="m1", arrival=2 * t_a, gpus=1, iters=8.0,
+                    batch=4, perf=perf)]
+        cap = 2 * perf.mem_bytes(2) + 0.05 * GB   # both@2 fit, 4+2 do not
+        interf = InterferenceModel()
+        for a in ("m0", "m1"):
+            for b in ("m0", "m1"):
+                interf.set_pair(a, b, 1.3, 1.3)
+        sched = _Inject(SJF_BSBF(donor_reconfig=True),
+                        {2: lambda sim: sim.fail_job(sim.jobs[1])})
+        cluster = ClusterState(n_servers=1, gpus_per_server=1,
+                               gpu_capacity_bytes=cap)
+        sim = Simulator(cluster, jobs, sched, interference=interf,
+                        fault_model=fault_model)
+        sim.run()
+        return sim, jobs
+
+    def test_donor_restored_when_rescale_peers(self):
+        sim, jobs = self._scenario(None)
+        fail_t = next(e[0] for e in sim.log if e[1] == "fail_job")
+        # donor shrank to admit the sharer, then restored at the kill
+        assert any(e[1] == "reconfig" and e[2] == 0 and e[3] == 2
+                   for e in sim.log)
+        assert any(e[1] == "reconfig" and e[2] == 0 and e[3] == 4
+                   and e[0] == pytest.approx(fail_t) for e in sim.log)
+        assert jobs[0].iters_done == pytest.approx(30.0)
+        assert jobs[1].iters_done == pytest.approx(8.0)
+
+    def test_donor_left_alone_without_rescale_peers(self):
+        sim, jobs = self._scenario(FaultModel(rescale_peers=False))
+        assert any(e[1] == "fail_job" for e in sim.log)
+        assert not any(e[1] == "reconfig" and e[2] == 0 and e[3] == 4
+                       for e in sim.log)
+        assert jobs[1].iters_done == pytest.approx(8.0)
+
+
+# ===================================================================== #
+# Whole-sim invariants: zero-rate identity, cross-engine/path equality
+# ===================================================================== #
+def _run_trace(policy, fault_model, engine=None, decision=None,
+               n_jobs=40, seed=11):
+    jobs = simulation_trace(n_jobs=n_jobs, seed=seed)
+    cluster = ClusterState(n_servers=8, gpus_per_server=4,
+                           gpu_capacity_bytes=11 * GB)
+    sim = Simulator(cluster, jobs, make_scheduler(policy),
+                    interference=paper_interference_model(),
+                    engine=engine, decision=decision,
+                    fault_model=fault_model, max_events=500_000)
+    sim.run()
+    return sim, jobs
+
+
+@pytest.mark.parametrize("policy", sorted(ALL_POLICIES))
+def test_zero_rate_model_bit_identical_to_no_model(policy):
+    sim_none, jobs_none = _run_trace(policy, None)
+    sim_zero, jobs_zero = _run_trace(policy, FaultModel())
+    assert sim_none.log == sim_zero.log
+    assert ([j.finish_time for j in jobs_none]
+            == [j.finish_time for j in jobs_zero])
+
+
+FAULTY = FaultModel(seed=3, job_mtbf=4000.0, server_mtbf=20000.0,
+                    server_repair=300.0, correlated_servers=2,
+                    checkpoint_interval=50.0)
+
+
+@pytest.mark.parametrize("policy", ["fifo", "sjf-bsbf"])
+def test_heap_matches_scan_under_faults(policy):
+    sim_s, jobs_s = _run_trace(policy, FAULTY, engine="scan", n_jobs=60,
+                               seed=7)
+    sim_h, jobs_h = _run_trace(policy, FAULTY, engine="heap", n_jobs=60,
+                               seed=7)
+    assert sum(j.failures for j in jobs_h) > 0   # the ladder actually bites
+    for ja, jb in zip(jobs_s, jobs_h):
+        assert jb.finish_time == pytest.approx(ja.finish_time, rel=REL)
+        assert jb.failures == ja.failures
+        assert jb.lost_iters == pytest.approx(ja.lost_iters, rel=REL,
+                                              abs=1e-3)
+    assert ([e[1] for e in sim_s.log if e[1].startswith(("fail", "recover"))]
+            == [e[1] for e in sim_h.log
+                if e[1].startswith(("fail", "recover"))])
+
+
+def test_decision_paths_bit_identical_under_faults():
+    sim_g, _ = _run_trace("sjf-bsbf", FAULTY, decision="grid", n_jobs=60,
+                          seed=7)
+    for decision in ("batched", "scalar"):
+        sim_d, _ = _run_trace("sjf-bsbf", FAULTY, decision=decision,
+                              n_jobs=60, seed=7)
+        assert sim_d.log == sim_g.log, decision
+
+
+def test_faulty_run_conserves_work_and_accounts_losses():
+    _, jobs = _run_trace("sjf", FAULTY, n_jobs=60, seed=7)
+    assert all(j.state is JobState.FINISHED for j in jobs)
+    for j in jobs:
+        assert j.iters_done == pytest.approx(j.iters, rel=1e-6)
+        assert j.lost_iters >= 0.0
+        if j.failures == 0 and j.preemptions == 0:
+            assert j.lost_iters == 0.0
+    useful = sum(j.iters for j in jobs)
+    lost = sum(j.lost_iters for j in jobs)
+    assert 0.0 < useful / (useful + lost) < 1.0

@@ -1,0 +1,97 @@
+"""Bounded-backoff retry primitive (repro.util.retry): policy
+validation, the full-jitter delay envelope, exhaustion semantics, and
+seeded determinism — the property the executor's bit-exact fault
+replays rest on."""
+import random
+
+import pytest
+
+from repro.util.retry import RetryPolicy, retry_call
+
+
+class TestRetryPolicy:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="attempts"):
+            RetryPolicy(attempts=0)
+        with pytest.raises(ValueError):
+            RetryPolicy(base=-1.0)
+        with pytest.raises(ValueError):
+            RetryPolicy(cap=-0.1)
+
+    def test_jitterless_delay_is_capped_exponential(self):
+        p = RetryPolicy(attempts=8, base=0.1, cap=1.0, jitter=False)
+        rng = random.Random(0)
+        delays = [p.delay(k, rng) for k in range(6)]
+        assert delays[:4] == pytest.approx([0.1, 0.2, 0.4, 0.8])
+        assert delays[4:] == [1.0, 1.0]   # capped
+
+    def test_jittered_delay_within_envelope(self):
+        p = RetryPolicy(attempts=8, base=0.1, cap=1.0, jitter=True)
+        rng = random.Random(7)
+        for k in range(6):
+            bound = min(1.0, 0.1 * 2 ** k)
+            for _ in range(20):
+                assert 0.0 <= p.delay(k, rng) <= bound
+
+
+class _Flaky:
+    def __init__(self, fail_times, exc=ValueError):
+        self.calls = 0
+        self.fail_times = fail_times
+        self.exc = exc
+
+    def __call__(self):
+        self.calls += 1
+        if self.calls <= self.fail_times:
+            raise self.exc(f"boom {self.calls}")
+        return "ok"
+
+
+class TestRetryCall:
+    def test_first_try_success_never_sleeps(self):
+        slept = []
+        assert retry_call(_Flaky(0), sleep=slept.append) == "ok"
+        assert slept == []
+
+    def test_transient_failures_absorbed(self):
+        fn = _Flaky(2)
+        slept, seen = [], []
+        out = retry_call(fn, policy=RetryPolicy(attempts=3),
+                         sleep=slept.append,
+                         on_retry=lambda k, exc, d: seen.append((k, d)))
+        assert out == "ok" and fn.calls == 3
+        assert len(slept) == len(seen) == 2
+        assert [k for k, _ in seen] == [0, 1]
+        assert all(d == s for (_, d), s in zip(seen, slept))
+
+    def test_exhaustion_raises_last_exception(self):
+        fn = _Flaky(5)
+        with pytest.raises(ValueError, match="boom 3"):
+            retry_call(fn, policy=RetryPolicy(attempts=3),
+                       sleep=lambda d: None)
+        assert fn.calls == 3   # bounded: no fourth attempt
+
+    def test_non_matching_exception_propagates_immediately(self):
+        fn = _Flaky(1, exc=KeyError)
+        with pytest.raises(KeyError):
+            retry_call(fn, retry_on=(ValueError,), sleep=lambda d: None)
+        assert fn.calls == 1
+
+    def test_seeded_rng_makes_schedule_deterministic(self):
+        def run(seed):
+            slept = []
+            retry_call(_Flaky(3), policy=RetryPolicy(attempts=4),
+                       seed=seed, sleep=slept.append)
+            return slept
+
+        assert run(0) == run(0)
+        assert run(0) != run(1)
+
+    def test_caller_owned_rng_is_consumed_in_sequence(self):
+        rng = random.Random(42)
+        slept = []
+        retry_call(_Flaky(1), rng=rng, sleep=slept.append)
+        retry_call(_Flaky(1), rng=rng, sleep=slept.append)
+        want_rng = random.Random(42)
+        want = [RetryPolicy().delay(0, want_rng) for _ in range(2)]
+        assert slept == pytest.approx(want)

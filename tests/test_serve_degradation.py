@@ -1,0 +1,180 @@
+"""Degraded-mode serving (DESIGN.md §16): per-request deadlines with
+timeout-shedding (queued and mid-decode), admission brown-out under
+overload with priority ordering, deadline-miss accounting, and bounded
+retry of transient segment faults — all off by default (the engine with
+no deadlines/injector is token-identical to the plain engine)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.cluster import FaultSpec, ScriptedFaults
+from repro.launch.engine import DecodeEngine
+from repro.models import init_params
+from repro.util.retry import RetryPolicy
+
+
+class ManualClock:
+    """Injectable engine clock: explicit advance, optional per-call
+    auto-increment (to age a request between the shed pre-pass and the
+    completion check inside one segment)."""
+
+    def __init__(self, dt=0.0):
+        self.t = 0.0
+        self.dt = dt
+
+    def __call__(self):
+        now = self.t
+        self.t += self.dt
+        return now
+
+    def advance(self, d):
+        self.t += d
+
+
+def _setup(seed=0):
+    cfg = dataclasses.replace(get_config("minicpm-2b").reduced(),
+                              dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, (4,)).astype(np.int32)
+               for _ in range(4)]
+    return cfg, params, prompts
+
+
+def _engine(cfg, params, clock=None, **kw):
+    kw.setdefault("n_slots", 1)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("segment", 4)
+    kw.setdefault("sleep", lambda d: None)
+    if clock is not None:
+        kw["clock"] = clock
+    return DecodeEngine(cfg, params, **kw)
+
+
+class TestBaselineUnchanged:
+    def test_degraded_knobs_off_are_token_identical(self):
+        cfg, params, prompts = _setup()
+        plain = _engine(cfg, params, n_slots=2)
+        out_plain = {}
+        for p in prompts[:3]:
+            out_plain[plain.submit(p, 8)] = None
+        out_plain = plain.run()
+
+        clocked = _engine(cfg, params, clock=ManualClock(), n_slots=2,
+                          brownout_depth=0,
+                          retry_policy=RetryPolicy(attempts=2))
+        for p in prompts[:3]:
+            clocked.submit(p, 8)
+        out_clocked = clocked.run()
+        assert out_clocked == out_plain
+        assert clocked.shed == {} and clocked.retry_after == {}
+        assert clocked.stats["shed_deadline"] == 0
+        assert clocked.stats["shed_brownout"] == 0
+        assert clocked.stats["deadline_miss"] == 0
+
+
+class TestDeadlineShedding:
+    def test_queued_request_past_deadline_never_admits(self):
+        cfg, params, prompts = _setup()
+        clock = ManualClock()
+        eng = _engine(cfg, params, clock=clock)
+        r0 = eng.submit(prompts[0], 8)               # occupies the slot
+        r1 = eng.submit(prompts[1], 8, deadline=5.0)
+        eng.step_segment()                           # r0 admitted, r1 queued
+        clock.advance(10.0)
+        out = eng.run()
+        assert eng.shed == {r1: "deadline"}
+        assert out[r1] == []                         # never decoded
+        assert len(out[r0]) == 8
+        assert eng.stats["shed_deadline"] == 1
+        assert eng.retry_after[r1] >= 0.0
+
+    def test_active_slot_past_deadline_frees_and_keeps_partial(self):
+        cfg, params, prompts = _setup()
+        clock = ManualClock()
+        eng = _engine(cfg, params, clock=clock)
+        r0 = eng.submit(prompts[0], 12, deadline=5.0)
+        eng.step_segment()                           # 4 of 12 tokens decoded
+        assert eng.active[0]
+        clock.advance(10.0)
+        eng.step_segment()                           # shed pre-pass fires
+        assert not eng.active.any()
+        assert eng.shed == {r0: "deadline"}
+        assert len(eng.outputs[r0]) == 4             # partial output kept
+        assert eng.slot_rid[0] == -1
+        assert eng.slot_deadline[0] is None
+        # the EWMA of one measured segment yields a positive hint
+        assert eng.retry_after[r0] > 0.0
+
+    def test_completed_but_late_counts_deadline_miss(self):
+        cfg, params, prompts = _setup()
+        # every clock read advances 0.3s: submit at 0.0, shed check at
+        # 0.3 (< deadline 0.5), completion check at 0.6 (> deadline)
+        eng = _engine(cfg, params, clock=ManualClock(dt=0.3))
+        r0 = eng.submit(prompts[0], 4, deadline=0.5)
+        eng.step_segment()
+        assert len(eng.outputs[r0]) == 4             # delivered in full
+        assert eng.stats["deadline_miss"] == 1
+        assert r0 not in eng.shed                    # late, not shed
+
+
+class TestBrownout:
+    def test_lowest_priority_then_youngest_shed_first(self):
+        cfg, params, prompts = _setup()
+        clock = ManualClock()
+        eng = _engine(cfg, params, clock=clock, brownout_depth=1)
+        r0 = eng.submit(prompts[0], 8)
+        eng.step_segment()                 # r0 takes the only slot
+        clock.advance(1.0)
+        r1 = eng.submit(prompts[1], 8, priority=1)
+        clock.advance(1.0)
+        r2 = eng.submit(prompts[2], 8, priority=0)
+        clock.advance(1.0)
+        r3 = eng.submit(prompts[3], 8, priority=1)
+        out = eng.run()
+        # depth 1: shed r2 (lowest priority), then r3 (youngest of the
+        # priority-1 pair); the oldest high-priority request survives
+        assert eng.shed == {r2: "brownout", r3: "brownout"}
+        assert eng.stats["shed_brownout"] == 2
+        assert len(out[r0]) == len(out[r1]) == 8
+        assert out[r2] == [] and out[r3] == []
+
+    def test_depth_zero_disables_brownout(self):
+        cfg, params, prompts = _setup()
+        eng = _engine(cfg, params, brownout_depth=0)
+        rids = [eng.submit(p, 4) for p in prompts]
+        out = eng.run()
+        assert eng.shed == {}
+        assert all(len(out[r]) == 4 for r in rids)
+
+
+class TestSegmentRetry:
+    def test_transient_segment_fault_retried_token_identical(self):
+        cfg, params, prompts = _setup()
+        want = _engine(cfg, params)
+        want.submit(prompts[0], 8)
+        out_want = want.run()
+
+        eng = _engine(cfg, params,
+                      fault_injector=ScriptedFaults(
+                          [FaultSpec(call=0, job="segment")]),
+                      retry_policy=RetryPolicy(attempts=3, base=0.0))
+        eng.submit(prompts[0], 8)
+        out = eng.run()
+        assert out == out_want
+        assert eng.stats["retries"] == 1
+        assert eng.shed == {}
+
+    def test_exhausted_segment_retry_propagates(self):
+        from repro.launch.cluster import TransientFault
+        cfg, params, prompts = _setup()
+        eng = _engine(cfg, params,
+                      fault_injector=ScriptedFaults(
+                          [FaultSpec(call=0, job="segment", times=2)]),
+                      retry_policy=RetryPolicy(attempts=2, base=0.0))
+        eng.submit(prompts[0], 8)
+        with pytest.raises(TransientFault):
+            eng.run()
