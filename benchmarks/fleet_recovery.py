@@ -1,0 +1,213 @@
+"""Fleet-recovery benchmark (DESIGN.md §17): detection latency,
+recovery time, and goodput of the master/agent runtime vs agent-failure
+rate.
+
+§16's ``fault_recovery`` benchmark measures failure cost inside the
+*simulator*; this one measures it in the *real* multi-process runtime:
+a 2-agent fleet replays the 4-job replay-validation schedule while
+:class:`ChaosKiller` SIGKILLs agents at a ladder of scripted rates
+(0, 1, 2 kills per run, with respawn enabled so capacity recovers).
+Per level it reports:
+
+* **detection_latency_s** — chaos kill to DEAD declaration, per death
+  (the SIGKILL fast path: socket EOF + confirmed process exit).
+* **recovery_time_s** — DEAD declaration to the replacement lease
+  being dispatched, per death.
+* **goodput** — useful steps over executed steps,
+  ``plan_steps / (steps_executed + steps_lost)``: work redone after a
+  kill (steps past the victim's last checkpoint) is the overhead.
+* **makespan_s**, redispatch/fence counters, and ``bit_exact`` — final
+  checkpoint CRCs vs the failure-free run at level 0 (recovery must
+  never change the answer).
+
+Writes ``artifacts/bench/BENCH_fleet.json``. Smoke mode (CI) runs the
+0- and 1-kill levels and asserts goodput >= 0.9 under failure plus
+bit-exactness across levels.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.fleet_recovery            # full
+    PYTHONPATH=src python -m benchmarks.fleet_recovery --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import tempfile
+import time
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.core import (ClusterState, InterferenceModel, Job, PerfParams,
+                        Simulator)
+from repro.core.schedulers import SJF_BSBF
+from repro.launch.cluster import JobSpec, plan_from_sim
+from repro.launch.fleet import (ChaosKiller, FleetConfig, FleetMaster,
+                                KillSpec)
+
+from .common import save_json
+
+GB = 2 ** 30
+
+# ladder: (label, kill specs) — kills fire on watermark thresholds so
+# the same level replays the same failure scenario
+LEVELS = (
+    ("none", ()),
+    ("one-kill", (KillSpec(agent="a0", after_steps=2),)),
+    ("two-kills", (KillSpec(agent="a0", after_steps=2),
+                   KillSpec(agent="a1", after_steps=4))),
+)
+SMOKE_LEVELS = LEVELS[:2]
+
+
+def _perf(alpha=0.01, beta=0.01) -> PerfParams:
+    return PerfParams(alpha_comp=alpha, beta_comp=beta, alpha_comm=0.0,
+                      beta_comm=0.0, msg_bytes=0.0, delta=2.0,
+                      mem_base=4.0 * GB, mem_per_sample=0.25 * GB,
+                      param_bytes=1e8, n_workers=1)
+
+
+def _replay_plan(iters_a: float):
+    """The 4-job replay-validation scenario: donor A on both GPUs,
+    sharers B/C (3-way group with donor reconfigs), late D."""
+    pa, pb = _perf(), _perf(beta=0.008)
+    t_a = pa.t_iter(4)
+    jobs = [Job(jid=0, model="m0", arrival=0.0, gpus=2, iters=iters_a,
+                batch=4, perf=pa),
+            Job(jid=1, model="m1", arrival=2 * t_a, gpus=1, iters=3.0,
+                batch=4, perf=pb),
+            Job(jid=2, model="m1", arrival=4 * t_a, gpus=1, iters=4.0,
+                batch=4, perf=pb),
+            Job(jid=3, model="m0", arrival=6 * t_a, gpus=1, iters=3.0,
+                batch=4, perf=pa)]
+    cap = pa.mem_bytes(2) + pb.mem_bytes(2) + 0.25 * 0.25 * GB
+    interf = InterferenceModel()
+    for a in ("m0", "m1"):
+        for b in ("m0", "m1"):
+            interf.set_pair(a, b, 1.3, 1.3)
+    cluster = ClusterState(n_servers=1, gpus_per_server=2,
+                           gpu_capacity_bytes=cap)
+    sim = Simulator(cluster, jobs, SJF_BSBF(donor_reconfig=True),
+                    interference=interf, reconfig_on_release=True)
+    sim.run()
+    plan = plan_from_sim(sim.log, sim.jobs, sim.interference, cap,
+                         names={0: "A", 1: "B", 2: "C", 3: "D"})
+
+    def spec(seed):
+        cfg = dataclasses.replace(get_config("minicpm-2b").reduced(),
+                                  dtype="float32")
+        return JobSpec(cfg, batch=4, seq=32, seed=seed)
+
+    specs = {"A": spec(0), "B": spec(1), "C": spec(2), "D": spec(3)}
+    return plan, specs
+
+
+def _run_level(label: str, kills, plan, specs, *,
+               step_sleep: float) -> Dict[str, object]:
+    plan_steps = sum(q for ph in plan.phases for _, q in ph.quotas)
+    cfg = FleetConfig(checkpoint_every=1, step_sleep=step_sleep,
+                      heartbeat_interval=0.1, suspect_after=0.5,
+                      dead_after=1.0, respawn=bool(kills))
+    chaos = ChaosKiller(list(kills)) if kills else None
+    t0 = time.time()
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        with FleetMaster(ckpt_dir, config=cfg, chaos=chaos) as master:
+            master.start(n_agents=2)
+            up = time.time()
+            report = master.run_plan(plan, specs)
+            makespan = time.time() - up
+            events = list(master.events)
+            stats = dict(master.stats)
+    deaths = [e for e in events if e["kind"] == "agent_dead"]
+    redisp = [e for e in events if e["kind"] == "lease_redispatch"]
+    losts = {e["agent"]: e["t"] for e in events
+             if e["kind"] == "agent_dead"}
+    detection = [e["detection_latency"] for e in deaths if e["killed"]]
+    # recovery: each dead agent's DEAD declaration -> the first
+    # redispatch dispatched at or after it
+    recovery: List[float] = []
+    for agent, t_dead in sorted(losts.items(), key=lambda kv: kv[1]):
+        later = [e["t"] for e in redisp if e["t"] >= t_dead]
+        if later:
+            recovery.append(min(later) - t_dead)
+    executed = stats["steps_executed"] + stats["steps_lost"]
+    goodput = plan_steps / executed if executed else 1.0
+    return {
+        "level": label,
+        "kills": len([e for e in events if e["kind"] == "chaos_kill"]),
+        "plan_steps": plan_steps,
+        "steps_executed": stats["steps_executed"],
+        "steps_lost": stats["steps_lost"],
+        "goodput": goodput,
+        "detection_latency_s": detection,
+        "recovery_time_s": recovery,
+        "redispatches": stats["redispatches"],
+        "fenced": stats["fenced"],
+        "respawns": stats["respawns"],
+        "makespan_s": makespan,
+        "spawn_s": up - t0,
+        "crcs": {name: report[name]["crc"] for name in sorted(specs)},
+        "finished": all(report[n]["finished"] for n in specs),
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: 0- and 1-kill levels, small plan, "
+                         "assert goodput and bit-exactness")
+    ap.add_argument("--iters-a", type=float, default=None,
+                    help="donor job length (default 6 smoke / 12 full)")
+    ap.add_argument("--step-sleep", type=float, default=0.3,
+                    help="agent pause between fused calls so kills land "
+                         "mid-lease")
+    args = ap.parse_args(argv)
+
+    levels = SMOKE_LEVELS if args.smoke else LEVELS
+    iters_a = args.iters_a or (6.0 if args.smoke else 12.0)
+    plan, specs = _replay_plan(iters_a)
+
+    rows = []
+    for label, kills in levels:
+        t0 = time.time()
+        row = _run_level(label, kills, plan, specs,
+                         step_sleep=args.step_sleep)
+        row["wall_s"] = time.time() - t0
+        rows.append(row)
+        det = ", ".join(f"{d * 1e3:.0f}ms" for d in
+                        row["detection_latency_s"]) or "-"
+        rec = ", ".join(f"{r * 1e3:.0f}ms" for r in
+                        row["recovery_time_s"]) or "-"
+        print(f"[{label:>10}] kills={row['kills']} "
+              f"goodput={row['goodput']:.3f} detect=[{det}] "
+              f"recover=[{rec}] makespan={row['makespan_s']:.1f}s")
+
+    baseline = rows[0]
+    for row in rows:
+        row["bit_exact"] = row["crcs"] == baseline["crcs"]
+
+    payload = {
+        "benchmark": "fleet_recovery",
+        "agents": 2,
+        "iters_a": iters_a,
+        "step_sleep": args.step_sleep,
+        "smoke": args.smoke,
+        "levels": rows,
+    }
+    path = save_json("BENCH_fleet.json", payload)
+    print(f"wrote {path}")
+
+    if args.smoke:
+        assert all(r["finished"] for r in rows), "jobs did not finish"
+        assert all(r["bit_exact"] for r in rows), \
+            "recovery changed final checkpoint CRCs"
+        failed = rows[-1]
+        assert failed["kills"] >= 1, "chaos kill did not fire"
+        assert failed["goodput"] >= 0.9, \
+            f"goodput {failed['goodput']:.3f} < 0.9 under failure"
+        assert all(d <= 1.5 for d in failed["detection_latency_s"]), \
+            "detection slower than dead_after + slack"
+        print("smoke OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,5 @@
-from .npz import (CheckpointError, load_pytree, restore, save,
-                  save_pytree)
+from .npz import (CheckpointError, checkpoint_crc, load_pytree, restore,
+                  save, save_pytree)
 
-__all__ = ["CheckpointError", "load_pytree", "restore", "save",
-           "save_pytree"]
+__all__ = ["CheckpointError", "checkpoint_crc", "load_pytree", "restore",
+           "save", "save_pytree"]

@@ -258,6 +258,8 @@ class ScheduleExecutor:
     def __init__(self, *, donate: bool = True, rules=None,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 0,
+                 checkpoint_tag: str = "",
+                 program_cache: Optional[Dict[tuple, Any]] = None,
                  fault_injector: Optional[ScriptedFaults] = None,
                  retry_policy: Optional[RetryPolicy] = None,
                  retry_seed: int = 0,
@@ -265,7 +267,11 @@ class ScheduleExecutor:
         self.runs: Dict[str, JobRun] = {}
         self.rules = rules
         self.donate = donate
-        self._programs: Dict[tuple, Any] = {}
+        # ``program_cache`` may be a shared dict: a fleet agent keeps one
+        # cache across the per-lease executors it creates, so a recurring
+        # group composition compiles once per process, not once per lease
+        self._programs: Dict[tuple, Any] = (
+            program_cache if program_cache is not None else {})
         self.compiles = 0
         self.calls = 0
         # fault tolerance (DESIGN.md §16): periodic async checkpoints,
@@ -273,6 +279,10 @@ class ScheduleExecutor:
         # path dropping fatally-failed members from their fused group
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = int(checkpoint_every)
+        # tag lands between the job name and ".npz": the fleet layer
+        # writes per-lease-epoch files (``job.e0003.npz``) so a fenced
+        # zombie epoch can never clobber the authoritative state
+        self.checkpoint_tag = checkpoint_tag
         self.fault_injector = fault_injector
         self.retry_policy = retry_policy or RetryPolicy()
         self._retry_rng = random.Random(retry_seed)
@@ -379,7 +389,8 @@ class ScheduleExecutor:
     # -- checkpoint / restart (DESIGN.md §16) -------------------------- #
     def _ckpt_path(self, name: str) -> str:
         assert self.checkpoint_dir is not None
-        return os.path.join(self.checkpoint_dir, f"{name}.npz")
+        return os.path.join(self.checkpoint_dir,
+                            f"{name}{self.checkpoint_tag}.npz")
 
     def _ckpt_worker(self) -> None:
         q = self._ckpt_queue
@@ -429,6 +440,50 @@ class ScheduleExecutor:
             self._ckpt_queue.join()
         if self._ckpt_errors:
             raise self._ckpt_errors[0]
+
+    def close(self) -> None:
+        """Drain and join the background checkpoint writer. The happy
+        path only ever ``flush``-ed — which leaves the worker thread
+        parked on its queue — so agent teardown (and any other process
+        exit path) must call this to guarantee every queued write landed
+        before the interpreter goes away. Idempotent; re-raises the
+        first background write error like :meth:`flush_checkpoints`."""
+        q, t = self._ckpt_queue, self._ckpt_thread
+        self._ckpt_queue = None
+        self._ckpt_thread = None
+        if q is not None:
+            q.join()                 # all queued writes landed
+            q.put(None)              # stop sentinel
+            if t is not None:
+                t.join()
+        if self._ckpt_errors:
+            raise self._ckpt_errors[0]
+
+    def __enter__(self) -> "ScheduleExecutor":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # don't mask an in-flight exception with a flush error
+        try:
+            self.close()
+        except BaseException:
+            if exc_type is None:
+                raise
+
+    def restore_run(self, name: str, path: str) -> JobRun:
+        """Load params/opt/step from an explicit checkpoint file into a
+        started run (the fleet agent's lease-resume path: the master
+        names which epoch's file is authoritative). CRC-verified by the
+        checkpoint layer; raises CheckpointError on bit-rot."""
+        run = self.runs[name]
+        if not run.started:
+            raise RuntimeError(f"job {name!r} not started")
+        params, opt, step = _ckpt.restore(
+            path, params_like=run.params, opt_like=run.opt)
+        run.params, run.opt = params, opt
+        run.steps_done = int(step)
+        run.last_ckpt_step = run.steps_done
+        return run
 
     def restart(self, name: str) -> JobRun:
         """Recover a failed (or stopped) job: pending checkpoint writes

@@ -1,6 +1,7 @@
 """Dependency-free shared utilities (stdlib only — importable from the
 numpy-less, jax-less simulator core and from the launch layer alike)."""
 from .errors import ArtifactVersionError
-from .retry import RetryPolicy, retry_call
+from .retry import RetryBudgetExceeded, RetryPolicy, retry_call
 
-__all__ = ["ArtifactVersionError", "RetryPolicy", "retry_call"]
+__all__ = ["ArtifactVersionError", "RetryBudgetExceeded", "RetryPolicy",
+           "retry_call"]

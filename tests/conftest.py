@@ -34,3 +34,15 @@ if settings is not None:
         suppress_health_check=[HealthCheck.too_slow])
     settings.register_profile("dev", max_examples=20, deadline=None)
     settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+
+
+def pytest_configure(config):
+    # The fleet tests mark themselves with @pytest.mark.timeout so CI
+    # (which installs pytest-timeout via the [test] extra) kills a hung
+    # multi-process run instead of stalling the job. Locally, without
+    # the plugin, register the marker so the mark is a harmless no-op —
+    # the master's own phase_timeout is the in-process backstop.
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): per-test timeout (enforced only when "
+        "pytest-timeout is installed)")

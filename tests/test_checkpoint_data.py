@@ -100,6 +100,54 @@ def test_load_truncated_file_raises_checkpoint_error(tmp_path):
         load_pytree(str(path), {"a": jnp.arange(4096, dtype=jnp.float32)})
 
 
+def test_bit_rot_detected_by_content_crc(tmp_path):
+    """A flipped bit inside a still-valid npz archive (the failure mode
+    atomicity cannot catch) raises CheckpointError on load instead of
+    silently restoring corrupt state."""
+    import pytest
+
+    from repro.checkpoint import CheckpointError
+    path = tmp_path / "rot.npz"
+    tree = {"a": jnp.arange(64, dtype=jnp.float32),
+            "b": {"c": jnp.ones((4, 4))}}
+    save_pytree(str(path), tree)
+    # re-save the archive with one array element flipped but the ORIGINAL
+    # stored CRC — a parseable-but-rotten file
+    with np.load(str(path)) as data:
+        members = {k: data[k].copy() for k in data.files}
+    members["a"][17] += 1.0
+    np.savez(str(path), **members)
+    with pytest.raises(CheckpointError, match="CRC mismatch"):
+        load_pytree(str(path), tree)
+
+
+def test_checkpoint_crc_is_a_content_digest(tmp_path):
+    """Equal content -> equal stored CRC (independent of write time and
+    path); different content -> different CRC. This is the digest the
+    fleet layer compares across processes."""
+    from repro.checkpoint import checkpoint_crc
+    tree = {"a": jnp.arange(8, dtype=jnp.float32), "step": jnp.asarray(3)}
+    p1, p2, p3 = (str(tmp_path / n) for n in ("x.npz", "y.npz", "z.npz"))
+    save_pytree(p1, tree)
+    save_pytree(p2, tree)
+    save_pytree(p3, {**tree, "step": jnp.asarray(4)})
+    c1, c2, c3 = map(checkpoint_crc, (p1, p2, p3))
+    assert c1 == c2 and c1 is not None
+    assert c3 != c1
+    # loading a checksummed file still round-trips
+    out = load_pytree(p1, tree)
+    assert (np.asarray(out["a"]) == np.arange(8)).all()
+
+
+def test_legacy_checkpoint_without_crc_loads_unchecked(tmp_path):
+    from repro.checkpoint import checkpoint_crc
+    path = tmp_path / "legacy.npz"
+    np.savez(str(path), a=np.arange(4, dtype=np.float32))
+    assert checkpoint_crc(str(path)) is None
+    out = load_pytree(str(path), {"a": jnp.zeros((4,), jnp.float32)})
+    assert (np.asarray(out["a"]) == np.arange(4)).all()
+
+
 def test_save_pytree_is_atomic_no_tmp_left(tmp_path):
     path = tmp_path / "ck.npz"
     save_pytree(str(path), {"a": jnp.ones((3,))})

@@ -195,6 +195,89 @@ class TestCheckpointRestart:
         with pytest.raises(OSError):
             ex.flush_checkpoints()
 
+    def test_close_drains_and_joins_writer_thread(self, tmp_path):
+        """Agent-teardown ordering: close() must land every queued write
+        AND terminate the worker thread (flush alone leaves it parked on
+        the queue). Idempotent, and usable as a context manager."""
+        ex = _ex(checkpoint_dir=str(tmp_path), checkpoint_every=1)
+        ex.submit("a", _spec(), 2)
+        ex.start("a")
+        ex.step_group(["a"])
+        ex.step_group(["a"])
+        thread = ex._ckpt_thread
+        assert thread is not None and thread.is_alive()
+        ex.close()
+        assert not thread.is_alive()
+        assert ex.checkpoints_written == 2
+        assert (tmp_path / "a.npz").exists()
+        ex.close()                       # idempotent
+        with _ex(checkpoint_dir=str(tmp_path)) as ex2:
+            ex2.submit("a", _spec(), 1)
+            ex2.start("a")
+            ex2.checkpoint("a")
+            t2 = ex2._ckpt_thread
+        assert not t2.is_alive()         # __exit__ closed it
+
+    def test_close_surfaces_background_write_error(self, tmp_path):
+        blocker = tmp_path / "blocker"
+        blocker.write_text("not a directory")
+        ex = _ex(checkpoint_dir=str(blocker))
+        ex.submit("a", _spec(), 2)
+        ex.start("a")
+        ex.checkpoint("a")
+        with pytest.raises(OSError):
+            ex.close()
+
+    def test_checkpoint_tag_names_epoch_files(self, tmp_path):
+        ex = _ex(checkpoint_dir=str(tmp_path), checkpoint_tag=".e0003")
+        ex.submit("a", _spec(), 1)
+        ex.start("a")
+        ex.step_group(["a"])
+        ex.checkpoint("a")
+        ex.close()
+        assert (tmp_path / "a.e0003.npz").exists()
+
+    def test_restore_run_from_explicit_path(self, tmp_path):
+        """restore_run loads a named epoch file bit-exactly: resume from
+        it and match an uninterrupted run."""
+        spec = _spec()
+        base = _ex()
+        base.submit("a", spec, 4)
+        base.start("a")
+        for _ in range(4):
+            base.step_group(["a"])
+
+        ex = _ex(checkpoint_dir=str(tmp_path), checkpoint_tag=".e0001")
+        ex.submit("a", spec, 4)
+        ex.start("a")
+        ex.step_group(["a"])
+        ex.step_group(["a"])
+        ex.checkpoint("a")
+        ex.close()
+
+        ex2 = _ex()
+        ex2.submit("a", spec, 4)
+        ex2.start("a")
+        run = ex2.restore_run("a", str(tmp_path / "a.e0001.npz"))
+        assert run.steps_done == 2
+        ex2.step_group(["a"])
+        ex2.step_group(["a"])
+        assert _leaves_equal(run.params, base.runs["a"].params)
+        assert _leaves_equal(run.opt, base.runs["a"].opt)
+
+    def test_shared_program_cache_across_executors(self):
+        cache = {}
+        ex1 = _ex(program_cache=cache)
+        ex1.submit("a", _spec(), 1)
+        ex1.start("a")
+        ex1.step_group(["a"])
+        assert ex1.compiles == 1 and len(cache) == 1
+        ex2 = _ex(program_cache=cache)
+        ex2.submit("a", _spec(seed=5), 1)
+        ex2.start("a")
+        ex2.step_group(["a"])
+        assert ex2.compiles == 0, "second executor reuses the cache"
+
 
 # ===================================================================== #
 # Degraded-mode plan execution

@@ -6,7 +6,8 @@ import random
 
 import pytest
 
-from repro.util.retry import RetryPolicy, retry_call
+from repro.util.retry import (RetryBudgetExceeded, RetryPolicy,
+                              retry_call)
 
 
 class TestRetryPolicy:
@@ -17,6 +18,8 @@ class TestRetryPolicy:
             RetryPolicy(base=-1.0)
         with pytest.raises(ValueError):
             RetryPolicy(cap=-0.1)
+        with pytest.raises(ValueError, match="deadline"):
+            RetryPolicy(deadline=-1.0)
 
     def test_jitterless_delay_is_capped_exponential(self):
         p = RetryPolicy(attempts=8, base=0.1, cap=1.0, jitter=False)
@@ -86,6 +89,48 @@ class TestRetryCall:
 
         assert run(0) == run(0)
         assert run(0) != run(1)
+
+    def test_deadline_raises_typed_budget_error(self):
+        """A retry whose backoff sleep would overrun the wall-clock
+        deadline is not attempted: RetryBudgetExceeded, chained to the
+        underlying failure, instead of an exhausted-attempts raise."""
+        now = [0.0]
+
+        def fake_sleep(d):
+            now[0] += d
+
+        fn = _Flaky(10)
+        with pytest.raises(RetryBudgetExceeded) as ei:
+            retry_call(fn, policy=RetryPolicy(attempts=10, base=1.0,
+                                              cap=1.0, jitter=False,
+                                              deadline=2.5),
+                       sleep=fake_sleep, clock=lambda: now[0])
+        # attempts 1 and 2 slept 1s each; the third retry's 1s sleep
+        # would land at t=3 > 2.5 — budget error after 3 calls
+        assert fn.calls == 3
+        assert ei.value.attempts == 3
+        assert ei.value.deadline == 2.5
+        assert isinstance(ei.value.__cause__, ValueError)
+
+    def test_deadline_does_not_fire_when_attempts_exhaust_first(self):
+        fn = _Flaky(5)
+        with pytest.raises(ValueError, match="boom 2"):
+            retry_call(fn, policy=RetryPolicy(attempts=2, base=0.0,
+                                              deadline=100.0),
+                       sleep=lambda d: None)
+        assert fn.calls == 2
+
+    def test_zero_deadline_allows_single_attempt(self):
+        """deadline=0 still permits the first call (no sleep needed) but
+        never a retry with a positive backoff."""
+        assert retry_call(_Flaky(0),
+                          policy=RetryPolicy(deadline=0.0)) == "ok"
+        now = [0.0]
+        with pytest.raises(RetryBudgetExceeded):
+            retry_call(_Flaky(1),
+                       policy=RetryPolicy(attempts=3, base=1.0,
+                                          jitter=False, deadline=0.0),
+                       sleep=lambda d: None, clock=lambda: now[0])
 
     def test_caller_owned_rng_is_consumed_in_sequence(self):
         rng = random.Random(42)
