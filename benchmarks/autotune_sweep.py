@@ -17,6 +17,11 @@ overheads) and tuned chunks for the SSD scan; a TPU re-run overwrites
 the table with native-kernel timings (entries are keyed by backend and
 ignored when loaded on a different one).
 
+``flash_decode_paged`` classes (page_size x head_dim x dtype, keyed on
+the exact page size) carry no block knobs: their sweep is the pure
+kernel-vs-reference routing decision, with the gather-oracle reference
+bitwise identical to the engine's jnp paged path.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.autotune_sweep            # full
     PYTHONPATH=src python -m benchmarks.autotune_sweep --smoke    # CI

@@ -27,9 +27,11 @@ Environment override: ``REPRO_AUTOTUNE=/path/to/table.json`` points the
 lazy load elsewhere; ``REPRO_AUTOTUNE=0`` (or ``off``) disables the table
 entirely (the test suite does this for hermeticity).
 
-Artifact schema (version 1)::
+Artifact schema (version 2 — version 1 lacked the ``flash_decode_paged``
+kind, whose shape classes key on the exact page size rather than a
+sequence bucket, so stale tables are invalidated)::
 
-    {"version": 1, "created": ...,
+    {"version": 2, "created": ...,
      "meta": {"backend": "cpu"|"tpu", "interpret": bool, "smoke": bool,
               "iters": n},
      "entries": {"<kind>|s<bucket>|d<dim>|<dtype>":
@@ -46,14 +48,17 @@ from typing import Dict, List, Optional, Tuple
 
 from ..util.errors import ArtifactVersionError
 
-AUTOTUNE_VERSION = 1
+AUTOTUNE_VERSION = 2
 DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                             "artifacts", "bench", "autotune.json")
 
-# the hard-coded choices the table replaces (and falls back to)
+# the hard-coded choices the table replaces (and falls back to).  The
+# paged decode kernel has no block knobs — tuning it is a pure
+# kernel-vs-reference routing decision per (page_size, head_dim, dtype).
 DEFAULTS = {
     "flash_attention": {"block_q": 128, "block_k": 128},
     "flash_decode": {"block_k": 128},
+    "flash_decode_paged": {},
     "ssd": {"chunk": 256},
 }
 
@@ -72,7 +77,10 @@ def seq_bucket(s: int) -> int:
 def shape_key(kind: str, s: int, d: int, dtype) -> str:
     import numpy as np
     name = np.dtype(dtype).name
-    return f"{kind}|s{seq_bucket(int(s))}|d{int(d)}|{name}"
+    # paged decode keys on the exact page size: page sizes (8/16/32...)
+    # sit below the 64-floor sequence bucket and would all collide
+    b = int(s) if kind == "flash_decode_paged" else seq_bucket(int(s))
+    return f"{kind}|s{b}|d{int(d)}|{name}"
 
 
 # ---------------------------------------------------------------------- #
@@ -184,20 +192,25 @@ CANDIDATES = {
     "flash_attention": [(64, 64), (64, 128), (128, 64), (128, 128),
                         (128, 256), (256, 128), (256, 256)],
     "flash_decode": [32, 64, 128, 256],
+    "flash_decode_paged": [None],       # no knobs: kernel-vs-ref only
     "ssd": [64, 128, 256],
 }
 SMOKE_CANDIDATES = {
     "flash_attention": [(64, 64), (128, 128)],
     "flash_decode": [64, 128],
+    "flash_decode_paged": [None],
     "ssd": [128, 256],
 }
 
-# (s, d) shape classes per kernel; smoke keeps CI fast (interpret mode)
+# (s, d) shape classes per kernel; smoke keeps CI fast (interpret mode).
+# For paged decode the "s" is the PAGE SIZE (keyed exactly, no bucket).
 ATTN_CLASSES = [(256, 32), (256, 64), (512, 64), (1024, 64)]
 DECODE_CLASSES = [(128, 32), (256, 64), (512, 64), (1024, 64)]
+PAGED_DECODE_CLASSES = [(8, 32), (16, 64), (32, 64), (16, 128)]
 SSD_CLASSES = [(256, 16), (512, 32), (1024, 32)]
 SMOKE_ATTN_CLASSES = [(128, 32), (256, 32)]
 SMOKE_DECODE_CLASSES = [(128, 32)]
+SMOKE_PAGED_DECODE_CLASSES = [(8, 32)]
 SMOKE_SSD_CLASSES = [(256, 16)]
 
 
@@ -321,6 +334,50 @@ def _tune_flash_decode(classes, candidates, iters: int, interpret: bool):
     return entries, sweep
 
 
+def _tune_flash_decode_paged(classes, candidates, iters: int,
+                             interpret: bool):
+    """No block knobs to sweep — the decision is purely whether the
+    Pallas paged kernel beats the XLA gather+softmax reference at this
+    (page_size, head_dim) class."""
+    del candidates
+    import jax
+    import jax.numpy as jnp
+
+    from . import flash_decode as _decode
+    from . import ref as _ref
+
+    entries, sweep = {}, {}
+    for (ps, d) in classes:
+        b, h, h_kv, p_tab = 8, 4, 2, 4
+        n_pages = b * p_tab
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (b, 1, h, d))
+        k_pool = jax.random.normal(ks[1], (n_pages, ps, h_kv, d))
+        v_pool = jax.random.normal(ks[2], (n_pages, ps, h_kv, d))
+        pages = jnp.arange(n_pages, dtype=jnp.int32).reshape(b, p_tab)
+        lengths = jnp.linspace(1, p_tab * ps, b).astype(jnp.int32)
+
+        def kern(q, k_pool, v_pool, pages, lengths):
+            return _decode.flash_decode_paged(
+                q.transpose(0, 2, 1, 3), k_pool, v_pool, pages, lengths,
+                interpret=interpret).transpose(0, 2, 1, 3)
+
+        rows = [
+            {"backend": "kernel",
+             "t": _time(jax.jit(kern), (q, k_pool, v_pool, pages, lengths),
+                        iters)},
+            {"backend": "ref",
+             "t": _time(jax.jit(_ref.flash_decode_paged_ref),
+                        (q, k_pool, v_pool, pages, lengths), iters)},
+        ]
+        key = shape_key("flash_decode_paged", ps, d, jnp.float32)
+        entries[key] = _pick(rows, DEFAULTS["flash_decode_paged"], "t")
+        sweep[key] = {"shape": {"b": b, "page_size": ps, "h": h,
+                                "h_kv": h_kv, "d": d, "n_pages": n_pages},
+                      "rows": rows}
+    return entries, sweep
+
+
 def _tune_ssd(classes, candidates, iters: int, interpret: bool):
     import jax
     import jax.numpy as jnp
@@ -380,6 +437,8 @@ def run_autotune(smoke: bool = False, iters: Optional[int] = None
     cands = SMOKE_CANDIDATES if smoke else CANDIDATES
     attn_classes = SMOKE_ATTN_CLASSES if smoke else ATTN_CLASSES
     dec_classes = SMOKE_DECODE_CLASSES if smoke else DECODE_CLASSES
+    paged_classes = (SMOKE_PAGED_DECODE_CLASSES if smoke
+                     else PAGED_DECODE_CLASSES)
     ssd_classes = SMOKE_SSD_CLASSES if smoke else SSD_CLASSES
 
     entries: Dict[str, Dict] = {}
@@ -387,6 +446,8 @@ def run_autotune(smoke: bool = False, iters: Optional[int] = None
     for tune, classes, cand in (
             (_tune_flash_attention, attn_classes, cands["flash_attention"]),
             (_tune_flash_decode, dec_classes, cands["flash_decode"]),
+            (_tune_flash_decode_paged, paged_classes,
+             cands["flash_decode_paged"]),
             (_tune_ssd, ssd_classes, cands["ssd"])):
         e, s = tune(classes, cand, iters, interpret)
         entries.update(e)

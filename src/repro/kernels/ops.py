@@ -99,7 +99,18 @@ def flash_decode_paged(q, k_pool, v_pool, pages, lengths):
     k_pool/v_pool: (N_pages, page_size, H_kv, D) shared pools; pages:
     (B, P) per-slot page table (-1 = unassigned); lengths: (B,) valid
     rows.  GQA is resolved inside the kernel's index maps — kv heads are
-    never repeated.  Not differentiable (serving only)."""
+    never repeated.  Not differentiable (serving only).
+
+    The kernel has no block knobs, so tuned routing is consulted
+    directly (``_resolve`` would early-return on the empty override
+    set): an entry recording ``backend: "ref"`` for this
+    (page_size, head_dim, dtype) class routes to the gather oracle,
+    bitwise identical to the engine's jnp paged path."""
+    entry = autotune.lookup("flash_decode_paged", k_pool.shape[1],
+                            q.shape[3], q.dtype)
+    if entry is not None and entry.get("backend") == "ref":
+        return _ref.flash_decode_paged_ref(q, k_pool, v_pool, pages,
+                                           lengths)
     qt = q.transpose(0, 2, 1, 3)
     out = _decode.flash_decode_paged(qt, k_pool, v_pool, pages, lengths,
                                      interpret=_interpret())

@@ -53,6 +53,30 @@ def flash_decode_ref(q, k, v, lengths):
     return out.astype(q.dtype)
 
 
+def flash_decode_paged_ref(q, k_pool, v_pool, pages, lengths):
+    """Paged decode attention, XLA path — *model layout*.
+
+    q: (B, 1, H, D); k_pool/v_pool: (N_pages, page_size, H_kv, D) shared
+    pools; pages: (B, P) block tables (-1 = unassigned); lengths: (B,)
+    valid rows.  Gathers each slot's pages into a linear cache (-1 rows
+    are gathered from page 0 but masked by ``lengths`` — the engine only
+    maps pages covering valid rows), repeats KV heads for GQA, and
+    defers to ``flash_decode_ref`` — so when the autotuner routes
+    ``ops.flash_decode_paged`` here the paged serving path stays BITWISE
+    identical to the engine's jnp path."""
+    b, p_tab = pages.shape
+    n_pages, ps, h_kv, d = k_pool.shape
+    h = q.shape[2]
+    safe = jnp.maximum(pages, 0)
+    k = k_pool[safe].reshape(b, p_tab * ps, h_kv, d)
+    v = v_pool[safe].reshape(b, p_tab * ps, h_kv, d)
+    groups = h // h_kv
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+    return flash_decode_ref(q, k, v, lengths)
+
+
 def ssd_ref(x, dt, A, Bm, Cm):
     """Sequential Mamba2/SSD recurrence (the obviously-correct oracle).
 

@@ -32,7 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.cluster import ScriptedFaults, TransientFault
-from repro.launch.serve import _make_scan_generate
+from repro.launch.prefix import PrefixTrie
+from repro.launch.serve import _make_scan_generate, prefill_extend_cached
 from repro.models import init_cache, init_paged_cache, prefill
 from repro.util.retry import RetryPolicy, retry_call
 
@@ -58,12 +59,26 @@ class DecodeEngine:
     admitted only when its worst-case page count (prompt + all decode
     segments) is available — while physical pages are assigned lazily,
     one segment ahead of the decode index, and reclaimed the moment the
-    slot frees.  Tokens are bitwise identical to the dense engine."""
+    slot frees.  Tokens are bitwise identical to the dense engine.
+
+    ``prefix_share=True`` (DESIGN.md §18) adds copy-on-write prefix
+    sharing on top of paging: a radix trie over token IDs maps each
+    incoming prompt to its longest cached prefix, whose pages are mapped
+    read-only into the new slot (per-page refcounts; a page is writable
+    only at refcount 1).  Admission charges reservation credit only for
+    the request's *unique* pages, prefill computes only the un-cached
+    suffix, and the first decode write into a still-shared boundary page
+    forks just that page.  Zero-ref cached prefixes are reclaimed LRU
+    under the ``retain_pages`` watermark — and eagerly under brown-out,
+    so cache memory sheds before queued requests do."""
 
     def __init__(self, cfg, params, *, n_slots: int = 4, max_len: int = 256,
                  segment: int = 8, use_kernels: bool = False,
                  paged: bool = False, page_size: int = 16,
                  n_pages: Optional[int] = None,
+                 prefix_share: bool = False,
+                 retain_pages: Optional[int] = None,
+                 debug: bool = False,
                  clock=time.monotonic,
                  brownout_depth: int = 0,
                  fault_injector: Optional[ScriptedFaults] = None,
@@ -76,6 +91,25 @@ class DecodeEngine:
         self.n_slots, self.max_len, self.segment = n_slots, max_len, segment
         self.use_kernels = use_kernels
         self.paged = paged
+        self.prefix_share = prefix_share
+        self.debug = debug
+
+        if prefix_share:
+            if not paged:
+                raise ValueError("prefix_share requires paged=True")
+            # bitwise contract: suffix prefill (prefill_extend) must
+            # reproduce the full prefill's rows exactly.  Proven for
+            # dense/vlm attention and for MoE under the per-token
+            # "dense" dispatch; the einsum/scatter MoE dispatches shape
+            # their capacity buffers by sequence length, and SSM/hybrid
+            # state is not page-addressable at all.
+            ok = cfg.family in ("dense", "vlm") or (
+                cfg.family == "moe" and cfg.moe_dispatch == "dense")
+            if not ok:
+                raise ValueError(
+                    f"prefix_share needs a bitwise-stable suffix prefill; "
+                    f"family {cfg.family!r} (moe_dispatch "
+                    f"{getattr(cfg, 'moe_dispatch', None)!r}) has none")
 
         if paged:
             if not _has_linear_kv(cfg):
@@ -98,12 +132,21 @@ class DecodeEngine:
                 cache["units"], dense_shapes)
             # host-side paging state
             self._free_pages: List[int] = list(range(n_pages))
-            self._avail_pages = n_pages          # un-reserved credit
             self._pages_np = np.full((n_slots, max_len // page_size), -1,
                                      np.int32)
             self._slot_npages = np.zeros(n_slots, np.int64)  # assigned
             self._slot_reserve = np.zeros(n_slots, np.int64)  # total credit
+            self._slot_unique = np.zeros(n_slots, np.int64)  # non-shared
             self._index_np = np.zeros(n_slots, np.int64)     # decode pos
+            # per-page refcounts: one per mapped block-table entry plus
+            # one per trie node.  Free <=> 0; writable by a slot <=> 1.
+            self._page_refs = np.zeros(n_pages, np.int32)
+            # outstanding credit: sum over slots of (reserve - unique),
+            # i.e. pages promised but not yet physically taken
+            self._committed = 0
+            self._trie = PrefixTrie(page_size) if prefix_share else None
+            self.retain_pages = (n_pages if retain_pages is None
+                                 else int(retain_pages))
         else:
             cache = init_cache(cfg, n_slots, max_len)
         cache["index"] = jnp.zeros((n_slots,), jnp.int32)  # per-slot position
@@ -139,6 +182,39 @@ class DecodeEngine:
                 "pages_total": n_pages, "pages_in_use": 0,
                 "peak_pages_in_use": 0, "page_occupancy": 0.0,
                 "page_fragmentation": 0.0, "admission_deferred_pages": 0})
+        if prefix_share:
+            self.stats.update({
+                "prefix_hits": 0, "prefix_misses": 0,
+                "prefix_hit_rate": 0.0, "prefill_tokens_saved": 0,
+                "prompt_tokens_total": 0, "cow_forks": 0,
+                "prefix_evictions": 0, "brownout_prefix_evictions": 0,
+                "shared_pages": 0, "unique_pages": 0, "trie_pages": 0})
+
+    # -- page credit / refcounts (DESIGN.md §15, §18) ------------------- #
+    @property
+    def _avail_pages(self) -> int:
+        """Admission credit: physically free pages minus outstanding
+        reservations, plus pages reclaimable from zero-ref cached
+        prefixes (the trie yields under admission pressure).  Without
+        prefix sharing this equals ``n_pages - sum(reservations)``."""
+        avail = len(self._free_pages) - self._committed
+        if self.prefix_share:
+            avail += self._trie.evictable_pages(self._page_refs)
+        return avail
+
+    def _take_page(self) -> int:
+        """Pop a physically free page (refcount 0 -> 1), evicting the
+        LRU zero-ref cached prefix page first if the free list is dry.
+        An IndexError here means the reservation credit was violated."""
+        if not self._free_pages and self.prefix_share:
+            page = self._trie.evict_lru(self._page_refs)
+            if page is not None:
+                self._page_refs[page] -= 1
+                self._free_pages.append(page)
+                self.stats["prefix_evictions"] += 1
+        page = self._free_pages.pop()
+        self._page_refs[page] = 1
+        return page
 
     # ------------------------------------------------------------------ #
     def submit(self, prompt, max_new_tokens: int = 16, *,
@@ -215,17 +291,52 @@ class DecodeEngine:
                 self.stats["shed_deadline"] += 1
                 self._free_slot(slot)
 
+    def _admissible_now(self) -> int:
+        """How many queued requests (FIFO prefix of the queue) could be
+        admitted right now into free slots with the current page credit
+        — the brown-out pass sheds only beyond this."""
+        free_slots = int((~self.active).sum())
+        avail, n = self._avail_pages, 0
+        for req in self.queue:
+            if n >= free_slots:
+                break
+            reserve, _ = self._plan_admission(req, touch=False)
+            if reserve > avail:
+                break
+            avail -= reserve
+            n += 1
+        return n
+
     def _brownout(self) -> None:
         """Overload graceful degradation: when the queue is deeper than
         ``brownout_depth``, shed the lowest-priority (then youngest)
         queued requests until it fits — load sheds before latency
-        collapses, and paying tiers degrade last."""
+        collapses, and paying tiers degrade last.
+
+        With prefix sharing the engine sheds *cache memory* first:
+        every zero-ref cached prefix is evicted (counted separately in
+        ``brownout_prefix_evictions``, not as shed requests), and only
+        requests beyond what the freed pages can admit are dropped —
+        the fewer-shed accounting of DESIGN.md §18."""
         if self.brownout_depth <= 0 or len(self.queue) <= self.brownout_depth:
             return
+        if self.prefix_share:
+            while True:
+                page = self._trie.evict_lru(self._page_refs)
+                if page is None:
+                    break
+                self._page_refs[page] -= 1
+                self._free_pages.append(page)
+                self.stats["brownout_prefix_evictions"] += 1
+            excess = (len(self.queue) - self._admissible_now()
+                      - self.brownout_depth)
+            if excess <= 0:
+                return
+        else:
+            excess = len(self.queue) - self.brownout_depth
         order = sorted(self.queue,
                        key=lambda r: (r.priority, -r.submitted_at))
-        drop = {r.rid for r in
-                order[:len(self.queue) - self.brownout_depth]}
+        drop = {r.rid for r in order[:excess]}
         kept = deque()
         for req in self.queue:
             if req.rid in drop:
@@ -248,15 +359,46 @@ class DecodeEngine:
         return seg
 
     def _prefill_fn(self, plen: int):
-        fn = self._prefill_fns.get(plen)
+        # prefix sharing pins prefill to the jnp path: the suffix-extend
+        # prefill has no kernel variant (the flash kernel assumes query
+        # row 0 is cache row 0), and hit/miss admissions must stay
+        # bitwise-consistent with each other
+        uk = self.use_kernels and not self.prefix_share
+        key = (plen, uk)
+        fn = self._prefill_fns.get(key)
         if fn is None:
             cfg, max_len = self.cfg, self.max_len
 
             def run(params, tokens):
                 cache = init_cache(cfg, 1, max_len)
-                return prefill(cfg, params, cache, tokens,
-                               use_kernels=self.use_kernels)
-            fn = self._prefill_fns[plen] = jax.jit(run)
+                return prefill(cfg, params, cache, tokens, use_kernels=uk)
+            fn = self._prefill_fns[key] = jax.jit(run)
+        return fn
+
+    def _gather_fn(self, n_pg: int):
+        """Jitted pool->dense gather: copy ``n_pg`` pool pages into rows
+        ``[0, n_pg*page_size)`` of a fresh batch-1 dense cache, the
+        launchpad for the suffix-extend prefill."""
+        key = ("gather", n_pg)
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+            cfg, max_len, ps = self.cfg, self.max_len, self.page_size
+            is_pool = self._is_pool
+
+            def run(units, pids):
+                cache = init_cache(cfg, 1, max_len)
+
+                def take(dn, pool, pl):
+                    if not pl:
+                        return dn
+                    u = pool.shape[0]      # pool: (U, n_pages, ps, H, D)
+                    rows = pool[:, pids].reshape(
+                        (u, 1, n_pg * ps) + pool.shape[3:])
+                    return dn.at[:, :, :n_pg * ps].set(rows.astype(dn.dtype))
+                cache["units"] = jax.tree.map(
+                    take, cache["units"], units, is_pool)
+                return cache
+            fn = self._prefill_fns[key] = jax.jit(run)
         return fn
 
     # ------------------------------------------------------------------ #
@@ -268,45 +410,61 @@ class DecodeEngine:
         rows = req.prompt.shape[0] + segs * self.segment
         return -(-rows // self.page_size)
 
+    def _plan_admission(self, req: Request, *, touch: bool = True):
+        """Reservation and prefix plan for one request.
+
+        Returns ``(reserve, match)``.  Without prefix sharing,
+        ``reserve`` is the worst-case page count and ``match`` is None.
+        With it, the trie is consulted: ``match = (pages_m, L, f)``
+        where ``L`` is the usable matched prefix length and ``f`` the
+        fully-shared page count.  ``reserve`` charges only unique pages
+        — the total minus the ``f`` shared ones — plus a one-page
+        *boundary-fork allowance* whenever the prompt ends mid-page:
+        publishing the tail page into the trie leaves it shared, and
+        the first decode write must fork it.
+
+        ``L`` is capped at ``plen - 2``: a one-row suffix matmul takes a
+        different XLA accumulation path than the same row of the full
+        prefill, so the bitwise contract needs >= 2 recomputed rows."""
+        total = self._pages_needed(req)
+        if not self.prefix_share:
+            return total, None
+        ps = self.page_size
+        plen = req.prompt.shape[0]
+        pages_m, matched = self._trie.match(req.prompt, touch=touch)
+        L = max(0, min(matched, plen - 2))
+        f = L // ps
+        reserve = total - f + (1 if plen % ps else 0)
+        return reserve, (pages_m, L, f)
+
     def _admit(self) -> None:
         """Fill every free slot from the queue: solo single-shot prefill,
         then scatter the request's cache rows into the slot (dense) or
         into freshly assigned pool pages (paged).  Paged admission is
-        credit-gated: the request's worst-case page count is reserved up
-        front (FIFO — an oversized head blocks the queue rather than
-        being bypassed), so ``_grow`` can never run out of pages
-        mid-flight."""
+        credit-gated: the request's worst-case *unique* page count is
+        reserved up front (FIFO — an oversized head blocks the queue
+        rather than being bypassed), so ``_grow`` can never run out of
+        pages mid-flight."""
         for slot in range(self.n_slots):
             if self.active[slot] or not self.queue:
                 continue
             if self.paged:
                 req = self.queue[0]
-                reserve = self._pages_needed(req)
+                reserve, match = self._plan_admission(req)
                 if reserve > self._avail_pages:
                     self.stats["admission_deferred_pages"] += 1
                     break
                 self.queue.popleft()
+                logits = self._admit_paged(slot, req, reserve, match)
             else:
                 req = self.queue.popleft()
-            plen = req.prompt.shape[0]
-            assert plen <= self.max_len
-            logits, pcache = self._prefill_fn(plen)(
-                self.params, jnp.asarray(req.prompt)[None, :])
-            if self.paged:
-                ps = self.page_size
-                self._avail_pages -= reserve
-                self._slot_reserve[slot] = reserve
-                npf = -(-plen // ps)
-                pids = [self._free_pages.pop() for _ in range(npf)]
-                self._pages_np[slot, :] = -1
-                self._pages_np[slot, :npf] = pids
-                self._slot_npages[slot] = npf
-                self._index_np[slot] = plen
-                self.cache["units"] = self._scatter_paged(
-                    pcache["units"], pids, slot)
-            else:
+                plen = req.prompt.shape[0]
+                assert plen <= self.max_len
+                logits, pcache = self._prefill_fn(plen)(
+                    self.params, jnp.asarray(req.prompt)[None, :])
                 self.cache["units"] = _scatter_slot(
                     self.cache["units"], pcache["units"], slot)
+            plen = req.prompt.shape[0]
             self.cache["index"] = self.cache["index"].at[slot].set(plen)
             first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
             self.tok = self.tok.at[slot, 0].set(first)
@@ -316,37 +474,124 @@ class DecodeEngine:
             self.slot_deadline[slot] = req.deadline
             self.stats["admitted"] += 1
 
-    def _scatter_paged(self, punits, pids: List[int], slot: int):
-        """Scatter a solo prefill cache into the paged engine cache: pool
-        leaves take the prompt's rows page by page; per-slot leaves (SSM
-        state, whisper cross K/V) scatter into the slot axis as in the
-        dense engine."""
+    def _admit_paged(self, slot: int, req: Request, reserve: int, match):
+        """Paged admission: map the fully-matched shared prefix pages
+        read-only (refcount +1, no credit), allocate unique pages for
+        the rest, prefill only the un-cached suffix (gathered through a
+        fresh dense cache), scatter the suffix rows, and publish the
+        prompt's pages into the trie."""
         ps = self.page_size
-        npf = len(pids)
+        plen = req.prompt.shape[0]
+        assert plen <= self.max_len
+        npf = -(-plen // ps)
+        pages_m, L, f = match if match is not None else ([], 0, 0)
+
+        self._pages_np[slot, :] = -1
+        for j in range(f):                      # shared prefix, read-only
+            p = int(pages_m[j])
+            self._pages_np[slot, j] = p
+            self._page_refs[p] += 1
+        for j in range(f, npf):                 # private suffix pages
+            self._pages_np[slot, j] = self._take_page()
+        self._slot_npages[slot] = npf
+        self._slot_reserve[slot] = reserve
+        self._slot_unique[slot] = npf - f
+        self._committed += reserve - (npf - f)
+        self._index_np[slot] = plen
+
+        if L > 0:
+            # gather every page with matched rows — including a
+            # partially-matched boundary page, used as a read source
+            # only (never mapped) — then extend from row L
+            n_m = -(-L // ps)
+            pids_m = jnp.asarray([int(p) for p in pages_m[:n_m]], jnp.int32)
+            gathered = self._gather_fn(n_m)(self.cache["units"], pids_m)
+            logits, pcache = prefill_extend_cached(
+                self.cfg, self.params, gathered,
+                jnp.asarray(req.prompt)[None, L:], start=L)
+            self.stats["prefix_hits"] += 1
+            self.stats["prefill_tokens_saved"] += L
+        else:
+            logits, pcache = self._prefill_fn(plen)(
+                self.params, jnp.asarray(req.prompt)[None, :])
+            if self.prefix_share:
+                self.stats["prefix_misses"] += 1
+        if self.prefix_share:
+            self.stats["prompt_tokens_total"] += plen
+        pids = [int(p) for p in self._pages_np[slot, f:npf]]
+        self.cache["units"] = self._scatter_paged(
+            pcache["units"], pids, slot, first_page=f)
+        if self.prefix_share:
+            for p in self._trie.insert(
+                    req.prompt, [int(x) for x in self._pages_np[slot, :npf]]):
+                self._page_refs[p] += 1
+            self._trim_trie()
+        return logits
+
+    def _scatter_paged(self, punits, pids: List[int], slot: int, *,
+                       first_page: int = 0):
+        """Scatter a solo prefill cache into the paged engine cache: pool
+        leaves take the prompt's rows page by page starting at prompt
+        page ``first_page`` (shared prefix pages before it are already
+        populated); per-slot leaves (SSM state, whisper cross K/V)
+        scatter into the slot axis as in the dense engine."""
+        ps = self.page_size
+        n = len(pids)
         pids_a = jnp.asarray(pids, jnp.int32)
+        lo = first_page * ps
 
         def put(dst, src, is_pool):
             if not is_pool:
                 return _scatter_slot_leaf(dst, src, slot)
             u = src.shape[0]                   # src: (U, 1, max_len, H, D)
-            rows = src[:, 0, :npf * ps]
-            rows = rows.reshape((u, npf, ps) + src.shape[3:])
+            rows = src[:, 0, lo:lo + n * ps]
+            rows = rows.reshape((u, n, ps) + src.shape[3:])
             return dst.at[:, pids_a].set(rows.astype(dst.dtype))
         return jax.tree.map(put, self.cache["units"], punits, self._is_pool)
+
+    def _fork_page(self, slot: int, j: int) -> None:
+        """Copy-on-write: give ``slot`` a private copy of block-table
+        entry ``j`` before it writes into a still-shared page.  Only the
+        boundary page of a freshly-published prompt can hit this, and
+        its admission pre-charged the fork allowance."""
+        old = int(self._pages_np[slot, j])
+        new = self._take_page()                 # refs[new] = 1
+        self._page_refs[old] -= 1
+
+        def cp(leaf, is_pool):
+            if not is_pool:
+                return leaf
+            return leaf.at[:, new].set(leaf[:, old])
+        self.cache["units"] = jax.tree.map(
+            cp, self.cache["units"], self._is_pool)
+        self._pages_np[slot, j] = new
+        self._slot_unique[slot] += 1
+        self._committed -= 1
+        self.stats["cow_forks"] += 1
 
     def _grow(self) -> None:
         """Assign pool pages covering the upcoming segment for every
         active slot — lazy assignment against the admission reservation,
-        so a slot only ever holds pages for rows it is about to write."""
+        so a slot only ever holds pages for rows it is about to write.
+        With prefix sharing, any still-shared page the segment will
+        write into is copy-on-write forked first."""
         ps = self.page_size
         for slot in range(self.n_slots):
             if not self.active[slot]:
                 continue
-            pend = -(-(int(self._index_np[slot]) + self.segment) // ps)
+            idx = int(self._index_np[slot])
+            pend = -(-(idx + self.segment) // ps)
+            if self.prefix_share:
+                for j in range(idx // ps, min(pend,
+                                              int(self._slot_npages[slot]))):
+                    if self._page_refs[int(self._pages_np[slot, j])] > 1:
+                        self._fork_page(slot, j)
             while self._slot_npages[slot] < pend:
                 self._pages_np[slot, self._slot_npages[slot]] = \
-                    self._free_pages.pop()
+                    self._take_page()
                 self._slot_npages[slot] += 1
+                self._slot_unique[slot] += 1
+                self._committed -= 1
 
     def step_segment(self) -> None:
         """One fused scan segment + post-segment bookkeeping/admission.
@@ -369,6 +614,15 @@ class DecodeEngine:
             occ = rows / (in_use * self.page_size) if in_use else 0.0
             self.stats["page_occupancy"] = occ
             self.stats["page_fragmentation"] = 1.0 - occ
+            if self.prefix_share:
+                refs = self._page_refs
+                self.stats["shared_pages"] = int((refs > 1).sum())
+                self.stats["unique_pages"] = int((refs == 1).sum())
+                self.stats["trie_pages"] = self._trie.page_count()
+                h, m = self.stats["prefix_hits"], self.stats["prefix_misses"]
+                self.stats["prefix_hit_rate"] = h / (h + m) if h + m else 0.0
+            if self.debug:
+                self._check_invariants()
         self.stats["peak_active_slots"] = max(
             self.stats["peak_active_slots"], int(self.active.sum()))
 
@@ -411,17 +665,73 @@ class DecodeEngine:
                 self._free_slot(slot)               # slot freed for reuse
 
     def _free_slot_pages(self, slot: int) -> None:
-        """Reclaim a freed slot's pages and reservation.  The block table
-        row is cleared immediately (pushed to the device before the next
-        segment), so the stale slot's continued writes drop instead of
-        corrupting whoever gets the pages next."""
+        """Reclaim a freed slot's pages and reservation.  Each mapped
+        page is dereferenced and returns to the free list only at
+        refcount 0 — shared prefix pages outlive the slot through their
+        other holders (the trie, sibling slots).  The block table row is
+        cleared to the -1 sentinel immediately (pushed to the device
+        before the next segment), so the stale slot's continued writes
+        drop instead of corrupting whoever gets the pages next."""
         npg = int(self._slot_npages[slot])
-        self._free_pages.extend(int(p) for p in self._pages_np[slot, :npg])
+        for p in self._pages_np[slot, :npg]:
+            p = int(p)
+            self._page_refs[p] -= 1
+            if self._page_refs[p] == 0:
+                self._free_pages.append(p)
         self._pages_np[slot, :] = -1
         self._slot_npages[slot] = 0
-        self._avail_pages += int(self._slot_reserve[slot])
+        self._committed -= (int(self._slot_reserve[slot])
+                            - int(self._slot_unique[slot]))
         self._slot_reserve[slot] = 0
+        self._slot_unique[slot] = 0
         self._index_np[slot] = 0
+        if self.prefix_share:
+            self._trim_trie()
+
+    def _trim_trie(self) -> None:
+        """LRU-trim cached prefixes down to the ``retain_pages``
+        watermark: pages held only by the trie are evicted oldest-first
+        until the evictable set fits."""
+        while self._trie.evictable_pages(self._page_refs) > self.retain_pages:
+            page = self._trie.evict_lru(self._page_refs)
+            if page is None:
+                break
+            self._page_refs[page] -= 1
+            self._free_pages.append(page)
+            self.stats["prefix_evictions"] += 1
+
+    def _check_invariants(self) -> None:
+        """Debug-mode structural audit of the paging state (the
+        refcount/free-list/credit contract of DESIGN.md §15/§18)."""
+        refs = self._page_refs
+        mapped = 0
+        for slot in range(self.n_slots):
+            npg = int(self._slot_npages[slot])
+            row = self._pages_np[slot]
+            assert (row[npg:] == -1).all(), \
+                f"slot {slot}: mapped entries past npages"
+            assert (row[:npg] >= 0).all(), \
+                f"slot {slot}: -1 sentinel read inside mapped range"
+            mapped += npg
+            if self.active[slot]:
+                need = -(-(int(self._index_np[slot]) + self.segment)
+                         // self.page_size)
+                assert npg >= need, f"slot {slot}: segment pages unmapped"
+                for p in row[:npg]:
+                    assert refs[int(p)] >= 1, f"slot {slot}: freed page {p}"
+        trie_pages = self._trie.page_count() if self.prefix_share else 0
+        assert int(refs.sum()) == mapped + trie_pages, \
+            "refcounts out of sync with block tables + trie"
+        assert len(set(self._free_pages)) == len(self._free_pages), \
+            "duplicate page on free list"
+        for p in self._free_pages:
+            assert refs[p] == 0, f"page {p} both free and referenced"
+        assert (refs >= 0).all(), "negative refcount"
+        assert len(self._free_pages) + int((refs > 0).sum()) == self.n_pages, \
+            "page leak: free + referenced != total"
+        assert self._committed == int(
+            (self._slot_reserve - self._slot_unique).sum()) >= 0, \
+            "reservation credit out of sync"
 
     def run(self) -> Dict[int, List[int]]:
         """Drain the queue and all active slots; returns {rid: tokens}."""

@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.models import (decode_step, init_cache, init_params, prefill,
-                          prefill_cache_whisper)
+                          prefill_cache_whisper, prefill_extend)
 
 # jitted decode/prefill callables, reused across generate() calls
 _JIT_CACHE: Dict[tuple, Callable] = {}
@@ -66,6 +66,19 @@ def prefill_one_shot(cfg, params, tokens, cache, *,
                      cfg, p, c, t, use_kernels=use_kernels)))
     logits, cache = fn(params, cache, tokens)
     return logits[:, -1:], cache
+
+
+def prefill_extend_cached(cfg, params, cache, tokens, *, start: int):
+    """Suffix prefill (prefix-shared serving, DESIGN.md §18): one jitted
+    call computes rows ``[start, start+S)`` into a cache whose prefix
+    rows are already populated.  ``start`` is a static Python int — it
+    keys the cache entry (and the trace) so the sliced attention extent
+    stays exact, which the bitwise-identity contract requires.  Returns
+    (logits (B, S, V), cache)."""
+    fn = _cached(("prefill_extend", cfg, start),
+                 lambda: jax.jit(lambda p, c, t: prefill_extend(
+                     cfg, p, c, t, start=start)))
+    return fn(params, cache, tokens)
 
 
 def prefill_per_token(cfg, params, tokens, cache, *,

@@ -1,7 +1,9 @@
 """Model zoo: dense / MoE / SSM (Mamba2, xLSTM) / hybrid / VLM / audio
 decoder architectures as pure-JAX pytree-param functions."""
 from .model import (decode_step, encode, forward, init_cache, init_paged_cache,
-                    init_params, param_count, prefill, prefill_cache_whisper)
+                    init_params, param_count, prefill, prefill_cache_whisper,
+                    prefill_extend)
 
 __all__ = ["decode_step", "encode", "forward", "init_cache", "init_paged_cache",
-           "init_params", "param_count", "prefill", "prefill_cache_whisper"]
+           "init_params", "param_count", "prefill", "prefill_cache_whisper",
+           "prefill_extend"]

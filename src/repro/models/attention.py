@@ -243,6 +243,48 @@ def attention_prefill(p, x, cos, sin, cache, *, n_heads, n_kv_heads,
             {"k": ck, "v": cv})
 
 
+def attention_prefill_extend(p, x, cos, sin, cache, *, start, n_heads,
+                             n_kv_heads, head_dim
+                             ) -> Tuple[jnp.ndarray, dict]:
+    """Suffix prefill (DESIGN.md §18): rows ``[0, start)`` of the linear
+    cache are already populated (a shared-prefix gather); write rows
+    ``[start, start+s)`` and attend the suffix queries over rows
+    ``[0, start+s)``.  x: (B, S_suffix, D) — already the residual stream
+    of the suffix positions only.
+
+    Because attention rows are independent (each output row reduces over
+    the same key extent), the outputs and cache rows are BITWISE
+    identical to the corresponding rows of ``attention_prefill`` over
+    the full sequence — provided the suffix has >= 2 rows (a single-row
+    matmul dispatches to a different XLA accumulation path) and the
+    cache dtype equals the compute dtype (prefix rows are read back
+    through the cache here, but attended uncast in full prefill).
+    Linear layout only; the flash kernel assumes q/k aligned, so this
+    path is always jnp."""
+    b, s, _ = x.shape
+    q = linear(p["wq"], x).reshape(b, s, n_heads, head_dim)
+    k = linear(p["wk"], x).reshape(b, s, n_kv_heads, head_dim)
+    v = linear(p["wv"], x).reshape(b, s, n_kv_heads, head_dim)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = constrain(q, "act_heads")
+    s_cache = cache["k"].shape[1]
+    assert start + s <= s_cache, (start, s, s_cache)
+    ck = cache["k"].at[:, start:start + s].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[:, start:start + s].set(v.astype(cache["v"].dtype))
+    ck = constrain(ck, "kv_cache")
+    cv = constrain(cv, "kv_cache")
+
+    groups = n_heads // n_kv_heads
+    kk = _repeat_kv(ck[:, :start + s], groups)
+    vv = _repeat_kv(cv[:, :start + s], groups)
+    out = full_attention(q, kk, vv, causal=True, q_offset=start)
+    out = constrain(out, "act_heads")
+    return (linear(p["wo"], out.reshape(b, s, n_heads * head_dim)),
+            {"k": ck, "v": cv})
+
+
 def attention_decode(p, x, cos, sin, cache, index, *, n_heads, n_kv_heads,
                      head_dim, window=0, use_kernel: bool = False,
                      pages=None) -> Tuple[jnp.ndarray, dict]:

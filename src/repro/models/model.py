@@ -660,6 +660,80 @@ def prefill(cfg: ArchConfig, params, cache, tokens, *,
     return constrain(logits, "logits"), new_cache
 
 
+def prefill_extend(cfg: ArchConfig, params, cache, tokens, *,
+                   start: int) -> Tuple[jnp.ndarray, Any]:
+    """Suffix prefill (DESIGN.md §18): continue a cache whose rows
+    ``[0, start)`` are already populated — the prefix-shared serving path
+    gathers a request's matched prompt prefix out of the page pool and
+    computes only the un-cached suffix here.  tokens: (B, S_suffix) i32
+    at absolute positions ``start .. start+S-1``.
+
+    Families with position-local per-layer state only (dense / vlm /
+    moe): attention is the sole cross-position op, so every suffix row's
+    hidden state — and therefore the K/V rows and logits — is BITWISE
+    identical to the same rows of a full ``prefill`` (suffix >= 2 rows;
+    see ``attention_prefill_extend``).  SSM/conv state (hybrid, ssm)
+    would need a snapshot at ``start`` and is rejected.  MoE caveat: the
+    router's capacity semantics see only the suffix tokens, mirroring
+    the one-shot-prefill caveat in ``serve.generate`` — at generous
+    capacity factors (no drops) routing is per-token and identity holds.
+
+    Returns (logits (B, S_suffix, V), cache with index start+S)."""
+    assert cfg.family in ("dense", "vlm", "moe"), \
+        f"prefill_extend requires position-local state; family " \
+        f"{cfg.family!r} carries recurrent state across positions"
+    assert cfg.sliding_window == 0, "linear cache layout only"
+    dt = _dtype(cfg)
+    b, s = tokens.shape
+    fam = cfg.family
+    x = embed(params["embed"], tokens, dt)
+    cos, sin = _rope_tables(cfg, jnp.arange(start, start + s))
+    akw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+               head_dim=cfg.head_dim, start=start)
+
+    def unit_extend(x, p, c):
+        if fam in ("dense", "vlm"):
+            h, kv = attn_mod.attention_prefill_extend(
+                p["attn"], rms_norm(p["ln1"], x, cfg.norm_eps),
+                cos, sin, c, **akw)
+            x = x + h
+            x = x + swiglu(p["mlp"], rms_norm(p["ln2"], x, cfg.norm_eps))
+            return x, kv
+        new_c = dict(c)                                     # moe
+        u = cfg.pattern_unit()
+        for i in range(u):
+            sub = p[f"sub{i}"]
+            h, kv = attn_mod.attention_prefill_extend(
+                sub["attn"], rms_norm(sub["ln1"], x, cfg.norm_eps),
+                cos, sin, c[f"sub{i}"], **akw)
+            x = x + h
+            hn = rms_norm(sub["ln2"], x, cfg.norm_eps)
+            if i == u - 1:
+                y, _ = moe_mod.moe_forward(
+                    sub["ffn"], hn, n_experts=cfg.moe_experts,
+                    top_k=cfg.moe_top_k,
+                    capacity_factor=cfg.moe_capacity_factor,
+                    dispatch=cfg.moe_dispatch)
+            else:
+                y = swiglu(sub["mlp"], hn)
+            x = x + y
+            new_c[f"sub{i}"] = kv
+        return x, new_c
+
+    def body(x, pc):
+        p, c = pc
+        return unit_extend(x, p, c)
+
+    x = constrain(x, "act_btd")
+    x, new_units = jax.lax.scan(body, x, (params["units"], cache["units"]))
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = _lm_head(cfg, params, x)
+    new_cache = dict(cache)
+    new_cache["units"] = new_units
+    new_cache["index"] = jnp.full_like(cache["index"], start + s)
+    return constrain(logits, "logits"), new_cache
+
+
 def decode_step(cfg: ArchConfig, params, cache, tokens, *,
                 index=None, use_kernels: bool = False
                 ) -> Tuple[jnp.ndarray, Any]:

@@ -187,14 +187,19 @@ class TestSweep:
         property), and ops picks it up through the env path."""
         monkeypatch.setattr(autotune, "SMOKE_ATTN_CLASSES", [(64, 8)])
         monkeypatch.setattr(autotune, "SMOKE_DECODE_CLASSES", [(64, 8)])
+        monkeypatch.setattr(autotune, "SMOKE_PAGED_DECODE_CLASSES",
+                            [(8, 8)])
         monkeypatch.setattr(autotune, "SMOKE_SSD_CLASSES", [(64, 8)])
         monkeypatch.setattr(autotune, "SMOKE_CANDIDATES", {
             "flash_attention": [(64, 64), (128, 128)],
             "flash_decode": [64, 128],
+            "flash_decode_paged": [None],
             "ssd": [64, 256],
         })
         table, bench = autotune.run_autotune(smoke=True, iters=1)
         assert set(table["entries"]) == set(bench["entries"])
+        assert any(k.startswith("flash_decode_paged|s8|")
+                   for k in table["entries"])
         for key, e in table["entries"].items():
             assert e["speedup_vs_default"] >= 1.0, (key, e)
             assert e["t_best"] <= e["t_ref"]
